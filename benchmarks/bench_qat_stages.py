@@ -1,0 +1,51 @@
+"""Paper Fig. 9: one-stage QAT (granularity aligned, ours) vs two-stage QAT
+(Saxena'23 style: stage 1 trains with full-precision partial sums, stage 2
+adds psum quantization). Reports accuracy and wall-clock training cost."""
+from __future__ import annotations
+
+from repro.core.granularity import Granularity as G
+
+from .common import _data, make_cim, train_qat
+
+
+def run(steps=150, seed=0, csv=None):
+    data = _data(seed)
+    rows = []
+
+    # (i) ours: column/column one-stage
+    r = train_qat(make_cim(G.COLUMN, G.COLUMN), steps=steps, seed=seed,
+                  data=data)
+    rows.append(("one-stage col/col (ours)", r["acc"], r["train_time"]))
+
+    # (ii) ours' granularity, two-stage (ablation): stage1 w/o psq
+    s1 = train_qat(make_cim(G.COLUMN, G.COLUMN), steps=steps // 2, seed=seed,
+                   freeze_psum=True, data=data)
+    s2 = train_qat(make_cim(G.COLUMN, G.COLUMN), steps=steps // 2, seed=seed,
+                   params=s1["params"], state=s1["state"], data=data)
+    rows.append(("two-stage col/col", s2["acc"],
+                 s1["train_time"] + s2["train_time"]))
+
+    # (iii) Saxena'23: layer weight / column psum, two-stage
+    s1 = train_qat(make_cim(G.LAYER, G.COLUMN), steps=steps // 2, seed=seed,
+                   freeze_psum=True, data=data)
+    s2 = train_qat(make_cim(G.LAYER, G.COLUMN), steps=steps // 2, seed=seed,
+                   params=s1["params"], state=s1["state"], data=data)
+    rows.append(("two-stage layer/col (Saxena'23)", s2["acc"],
+                 s1["train_time"] + s2["train_time"]))
+
+    # (iv) layer/column one-stage
+    r = train_qat(make_cim(G.LAYER, G.COLUMN), steps=steps, seed=seed,
+                  data=data)
+    rows.append(("one-stage layer/col", r["acc"], r["train_time"]))
+
+    print("\n== Fig.9: QAT schemes — accuracy vs training cost ==")
+    for name, acc, tt in rows:
+        line = f"qat_stages,{name},acc={acc:.4f},train_s={tt:.1f}"
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""Shared benchmark harness: scaled-down QAT of ResNet-20 on the synthetic
+class-conditional image set (paper Table II settings, reduced for CPU).
+
+Absolute top-1 numbers are not comparable to the paper's CIFAR results (no
+CIFAR on this box); every benchmark reports the *relative* quantity the
+paper claims: granularity orderings, overhead-iso accuracy, one- vs
+two-stage cost, variation robustness curves.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cim_linear import CIMConfig
+from repro.core.granularity import Granularity
+from repro.data.pipeline import make_image_dataset, synth_classification_batch
+from repro.models.resnet import ResNetConfig, calibrate, forward, init
+
+HW = 16
+N_CLASSES = 10
+WIDTHS = (8, 16, 32)
+
+
+def make_cim(gw: Granularity, gp: Granularity, *, psum_quant=True,
+             weight_bits=3, cell_bits=1, act_bits=3, psum_bits=4,
+             array=128, variation_std=0.0) -> CIMConfig:
+    """Paper Table II CIFAR-10 column: 3b act / 3b weight (1b/cell),
+    low-bit psums, 128x128 arrays."""
+    return CIMConfig(enabled=True, mode="emulate", weight_bits=weight_bits,
+                     cell_bits=cell_bits, act_bits=act_bits,
+                     psum_bits=psum_bits, array_rows=array, array_cols=array,
+                     weight_granularity=gw, psum_granularity=gp,
+                     act_signed=False, psum_quant=psum_quant,
+                     variation_std=variation_std)
+
+
+def resnet_cfg(cim: CIMConfig) -> ResNetConfig:
+    return ResNetConfig(name="resnet20-bench", depth=20, n_classes=N_CLASSES,
+                        widths=WIDTHS, in_hw=HW, cim=cim)
+
+
+def _data(seed=0, n=1536):
+    x, y = make_image_dataset(n_classes=N_CLASSES, hw=HW, n=n, seed=seed)
+    n_test = n // 4
+    return (x[n_test:], y[n_test:]), (x[:n_test], y[:n_test])
+
+
+def _loss_fn(params, state, xb, yb, cfg):
+    logits, new_state = forward(params, state, xb, cfg, train=True)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1)), new_state
+
+
+def evaluate(params, state, cfg, x, y, batch=128,
+             variation_key: Optional[jax.Array] = None) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i:i + batch])
+        vk = None
+        if variation_key is not None:
+            variation_key, vk = jax.random.split(variation_key)
+        logits, _ = forward(params, state, xb, cfg, train=False,
+                            variation_key=vk)
+        pred = np.asarray(jnp.argmax(logits, -1))
+        correct += int((pred == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def train_qat(cim: CIMConfig, *, steps=150, batch=64, lr=0.05, seed=0,
+              params=None, state=None, freeze_psum: bool = False,
+              data=None) -> Dict:
+    """One-stage QAT from scratch (paper's scheme) or a stage of a
+    two-stage schedule (freeze_psum=True disables psum quantization)."""
+    cfg = resnet_cfg(cim.replace(psum_quant=cim.psum_quant and not freeze_psum))
+    (xtr, ytr), (xte, yte) = data or _data(seed)
+    if params is None:
+        params, state = init(jax.random.PRNGKey(seed), cfg)
+        if cfg.cim.enabled:
+            params = calibrate(params, state,
+                               jnp.asarray(xtr[:128]), cfg)
+
+    mom = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    @jax.jit
+    def step_fn(params, state, mom, xb, yb, lr_t):
+        (loss, new_state), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+            params, state, xb, yb, cfg)
+        mom = jax.tree.map(lambda m, gg: 0.9 * m + gg.astype(jnp.float32),
+                           mom, g)
+        params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+            params, mom)
+        return params, new_state, mom, loss
+
+    t0 = time.time()
+    losses = []
+    for it in range(steps):
+        xb, yb = synth_classification_batch(xtr, ytr, batch, it, seed)
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * it / steps))
+        params, state, mom, loss = step_fn(params, state, mom,
+                                           jnp.asarray(xb), jnp.asarray(yb),
+                                           lr_t)
+        losses.append(float(loss))
+    train_time = time.time() - t0
+    acc = evaluate(params, state, cfg, xte, yte)
+    return {"params": params, "state": state, "acc": acc,
+            "train_time": train_time, "losses": losses, "cfg": cfg}

@@ -1,0 +1,44 @@
+"""Benchmark driver: one function per paper table/figure + the framework's
+own kernel/LM benches. Prints ``name,...`` CSV lines (tee'd by the final
+deliverable run).
+
+  PYTHONPATH=src python -m benchmarks.run [--steps N] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="QAT steps per scheme (paper uses 200 epochs; this"
+                         " is the scaled-down CPU setting)")
+    ap.add_argument("--fast", action="store_true",
+                    help="minimal steps (CI smoke)")
+    args = ap.parse_args(argv)
+    steps = 30 if args.fast else args.steps
+
+    from . import (bench_dequant_overhead, bench_granularity, bench_kernel,
+                   bench_lm_cim, bench_psum_range, bench_qat_stages,
+                   bench_variation)
+
+    csv = []
+    t0 = time.time()
+    bench_dequant_overhead.run(csv=csv)            # Fig. 8 (analytic)
+    bench_psum_range.run(csv=csv)                  # Fig. 6
+    bench_kernel.run(csv=csv)                      # kernel microbench
+    bench_granularity.run(steps=steps, csv=csv)    # Fig. 7 / Table III
+    bench_qat_stages.run(steps=steps, csv=csv)     # Fig. 9
+    bench_variation.run(steps=steps, csv=csv)      # Fig. 10
+    bench_lm_cim.run(steps=max(20, steps // 3), csv=csv)  # beyond-paper LM
+
+    print(f"\n== CSV summary ({time.time() - t0:.0f}s total) ==")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end LM training driver with the paper's technique as a
+first-class feature: train a ~100M-class LM (reduced qwen3 family) with
+CIM column-wise quantized projections on the synthetic token stream,
+with checkpointing + auto-resume.
+
+Full-size invocation (what you'd run on a pod):
+  python -m repro.launch.train --arch qwen3-0.6b --steps 500 \
+      --batch 64 --seq 1024 --cim emulate
+
+This example runs the reduced config for a CPU-friendly demo:
+  PYTHONPATH=src python examples/train_lm_cim.py [--steps 120]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--full-size", action="store_true",
+                    help="train the real 0.6B config (slow on CPU)")
+    args = ap.parse_args()
+    argv = [
+        "--arch", "qwen3-0.6b",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "96",
+        "--cim", "emulate", "--cim-bits", "4", "--cim-cell-bits", "2",
+        "--cim-psum-bits", "6",
+        "--ckpt-dir", "/tmp/repro_lm_cim_ckpt",
+        "--ckpt-every", "40",
+    ]
+    if not args.full_size:
+        argv.append("--reduced")
+    raise SystemExit(train_main(argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture registry: --arch <id> -> ModelConfig (full or reduced),
+plus per-cell (arch x shape) applicability used by the dry-run and the
+roofline table."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.core.cim_linear import CIMConfig
+from .base import SHAPES, ModelConfig, Shape
+
+ARCHS: Dict[str, str] = {
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "granite-8b": "repro.configs.granite_8b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+
+def get_config(arch: str, *, reduced: bool = False,
+               cim: CIMConfig | None = None) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch])
+    cfg = mod.reduced() if reduced else mod.config()
+    if cim is not None:
+        cfg = cfg.replace(cim=cim)
+    return cfg
+
+
+def cell_status(arch: str, shape_name: str) -> Tuple[bool, str]:
+    """(runnable, reason). Skips per DESIGN.md §5: long_500k only for
+    sub-quadratic families; whisper (enc-dec, 448/1500-position model)
+    skips long_500k."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k":
+        if not cfg.sub_quadratic:
+            return False, "skip: quadratic softmax attention at 524288"
+    return True, "ok"
+
+
+def all_cells() -> List[Tuple[str, str, bool, str]]:
+    out = []
+    for arch in ARCHS:
+        for sname in SHAPES:
+            ok, why = cell_status(arch, sname)
+            out.append((arch, sname, ok, why))
+    return out

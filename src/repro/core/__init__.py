@@ -1,0 +1,19 @@
+"""Core library: the paper's column-wise weight + partial-sum quantization
+for CIM accelerators, as composable JAX building blocks."""
+from .bitsplit import place_values, recombine, split_digits
+from .cim_conv import (calibrate_cim_conv, cim_conv2d, conv_dequant_muls,
+                       init_cim_conv)
+from .cim_linear import (CIMConfig, calibrate_cim, cim_linear, init_cim_linear,
+                         pack_deploy)
+from .granularity import ArrayTiling, Granularity, conv_tiling, n_splits
+from .quantizer import (init_scale_from, lsq_fake_quant, lsq_integer, qrange,
+                        round_ste)
+from .variation import apply_cell_variation
+
+__all__ = [
+    "ArrayTiling", "CIMConfig", "Granularity", "apply_cell_variation",
+    "calibrate_cim", "cim_conv2d", "cim_linear", "conv_dequant_muls",
+    "conv_tiling", "init_cim_conv", "init_cim_linear", "init_scale_from",
+    "lsq_fake_quant", "lsq_integer", "n_splits", "pack_deploy",
+    "place_values", "qrange", "recombine", "round_ste", "split_digits",
+]

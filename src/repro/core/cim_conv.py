@@ -1,0 +1,224 @@
+"""CIM-oriented convolution framework (paper §III-C, Fig. 5).
+
+The paper's engineering contribution: implementing column-wise weight and
+partial-sum quantization for conv layers *without* per-array sequential
+indexing or im2col linear ops. Two ideas, both reproduced natively:
+
+1. **Stretched-kernel tiling.** Instead of im2col'ing activations and
+   tiling the resulting matrix arbitrarily, choose the tiling stride so
+   each CIM array holds ``c_per_array = floor(array_rows / K^2)`` whole
+   input channels with all their K^2 taps ("stretched kernels remain
+   intact in each array"). The array's MAC is then itself a convolution
+   over a channel slice.
+
+2. **Group convolution.** All ``k_tiles`` channel-slice convolutions run
+   as ONE grouped convolution (``feature_group_count = k_tiles``) by
+   replicating the activation channel-slices into groups — no sequential
+   array indexing. The grouped conv's output channels factor as
+   (k_tiles, C_out): exactly the per-array partial sums, ready for
+   column-wise ADC quantization, fused dequant and shift-and-add.
+
+Bit-splits are the leading axis of the grouped-conv weight batch, as in
+Fig. 5's "weight duplication".
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bitsplit import place_values, split_digits
+from .cim_linear import CIMConfig, _quantize_act
+from .granularity import Granularity, conv_tiling
+from .quantizer import init_scale_from, lsq_fake_quant, qrange
+from .variation import apply_cell_variation
+
+
+def init_cim_conv(
+    key: jax.Array,
+    kh: int, kw: int, c_in: int, c_out: int,
+    cfg: CIMConfig,
+    dtype=jnp.float32,
+) -> Dict[str, jnp.ndarray]:
+    """Params for a CIM conv layer; weight layout HWIO."""
+    fan_in = kh * kw * c_in
+    w = (jax.random.normal(key, (kh, kw, c_in, c_out), jnp.float32)
+         * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+    params: Dict[str, jnp.ndarray] = {"w": w}
+    if cfg.enabled:
+        t, _ = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows,
+                           cfg.array_cols, cfg.weight_bits, cfg.cell_bits)
+        params["s_w"] = conv_weight_scales_from(w.astype(jnp.float32), cfg)
+        _, qp_p = qrange(cfg.psum_bits, True)
+        p_mag = jnp.sqrt(float(t.array_rows)) * (2 ** (cfg.act_bits - 2)) \
+            * (2 ** (cfg.cell_bits - 1)) / 2.0
+        params["s_p"] = jnp.full(
+            t.psum_scale_shape(cfg.psum_granularity),
+            2.0 * p_mag / jnp.sqrt(float(max(qp_p, 1))), jnp.float32)
+        params["s_a"] = jnp.asarray([1.0], jnp.float32)
+    return params
+
+
+def conv_weight_scales_from(w: jnp.ndarray, cfg: CIMConfig) -> jnp.ndarray:
+    """Per-group LSQ init for conv weights: a column group is one output
+    channel's taps within one channel-slice array (paper's tiling)."""
+    kh, kw, c_in, c_out = w.shape
+    t, cpa = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                         cfg.weight_bits, cfg.cell_bits)
+    _, qp = qrange(cfg.weight_bits, True)
+    pad_c = t.k_tiles * cpa - c_in
+    w_abs = jnp.abs(jnp.pad(w.astype(jnp.float32),
+                            ((0, 0), (0, 0), (0, pad_c), (0, 0))))
+    w_t = w_abs.reshape(kh * kw, t.k_tiles, cpa, c_out)
+    ch = jnp.minimum(jnp.full((t.k_tiles,), cpa),
+                     c_in - jnp.arange(t.k_tiles) * cpa).astype(jnp.float32)
+    m_col = w_t.sum(axis=(0, 2)) / (ch[:, None] * kh * kw)     # (kt, c_out)
+    g = cfg.weight_granularity
+    if g == Granularity.COLUMN:
+        s = m_col
+    elif g == Granularity.ARRAY:
+        pad_n = t.n_tiles * t.oc_per_array - c_out
+        mc = jnp.pad(m_col, ((0, 0), (0, pad_n)))
+        s = mc.reshape(t.k_tiles, t.n_tiles, t.oc_per_array).mean(-1)
+    else:
+        s = jnp.mean(m_col, keepdims=True).reshape(1, 1)
+    return (2.0 * s / jnp.sqrt(float(max(qp, 1)))).astype(jnp.float32) + 1e-9
+
+
+def _quantize_conv_weight_int(params, cfg: CIMConfig, t, c_per_array, kh, kw,
+                              c_in, c_out):
+    """Integer codes (kh, kw, c_in, c_out) with per-(array, column) scales."""
+    w = params["w"].astype(jnp.float32)
+    s_w = t.broadcast_weight_scale(params["s_w"])            # (kt, C_out)
+    # expand scale to HWIO: channel c belongs to array tile c // c_per_array
+    tile_of_c = jnp.arange(c_in) // c_per_array              # (c_in,)
+    s_full = s_w[tile_of_c]                                  # (c_in, C_out)
+    s_full = jnp.broadcast_to(s_full[None, None], (kh, kw, c_in, c_out))
+    w_hat = lsq_fake_quant(
+        w, s_full, cfg.weight_bits, signed=True,
+        group_size=t.weight_group_size(cfg.weight_granularity))
+    return w_hat / jnp.maximum(s_full, 1e-9)
+
+
+def cim_conv2d(
+    x: jnp.ndarray,                      # (B, H, W, C_in)  NHWC
+    params: Dict[str, jnp.ndarray],
+    cfg: CIMConfig,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    variation_key: Optional[jax.Array] = None,
+    compute_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Conv2d through the CIM framework. Returns (B, H', W', C_out)."""
+    kh, kw, c_in, c_out = params["w"].shape
+    dn = ("NHWC", "HWIO", "NHWC")
+    if not cfg.enabled or cfg.mode == "off":
+        return jax.lax.conv_general_dilated(
+            x.astype(compute_dtype), params["w"].astype(compute_dtype),
+            (stride, stride), padding, dimension_numbers=dn)
+
+    t, c_per_array = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows,
+                                 cfg.array_cols, cfg.weight_bits, cfg.cell_bits)
+    k_tiles = t.k_tiles
+
+    a_int, s_a = _quantize_act(x, params, cfg)               # (B,H,W,C_in)
+    w_int = _quantize_conv_weight_int(params, cfg, t, c_per_array,
+                                      kh, kw, c_in, c_out)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)  # (S,kh,kw,ci,co)
+    if variation_key is not None and cfg.variation_std > 0:
+        digits = apply_cell_variation(digits, variation_key, cfg.variation_std)
+    n_split = digits.shape[0]
+
+    # --- group-conv framework -------------------------------------------------
+    # pad channels to k_tiles * c_per_array and replicate per group
+    c_pad = k_tiles * c_per_array - c_in
+    a_p = jnp.pad(a_int, ((0, 0), (0, 0), (0, 0), (0, c_pad)))
+    d_p = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, c_pad), (0, 0)))
+
+    # weights: (S, kh, kw, kt*cpa, co) -> grouped HWIO (kh, kw, cpa, S*kt*co)
+    # group g in [0, S*kt): split s = g // kt, tile t = g % kt
+    d_g = d_p.reshape(n_split, kh, kw, k_tiles, c_per_array, c_out)
+    d_g = jnp.transpose(d_g, (1, 2, 4, 0, 3, 5))             # kh,kw,cpa,S,kt,co
+    d_g = d_g.reshape(kh, kw, c_per_array, n_split * k_tiles * c_out)
+
+    # activations: replicate the channel-slices once per split
+    a_g = jnp.tile(a_p, (1, 1, 1, n_split))                  # (B,H,W,S*kt*cpa)
+
+    psum = jax.lax.conv_general_dilated(
+        a_g.astype(compute_dtype), d_g.astype(compute_dtype),
+        (stride, stride), padding, dimension_numbers=dn,
+        feature_group_count=n_split * k_tiles,
+        preferred_element_type=jnp.float32,
+    )                                                        # (B,H',W',S*kt*co)
+    b, ho, wo, _ = psum.shape
+    psum = psum.reshape(b, ho, wo, n_split, k_tiles, c_out)  # per-array psums
+
+    if cfg.psum_quant:
+        s_p = t.broadcast_psum_scale(params["s_p"])          # (S, kt, co)
+        psum = lsq_fake_quant(psum, s_p[None, None, None], cfg.psum_bits,
+                              signed=True)
+
+    # fused dequant + shift-and-add (paper Fig. 5 bottom)
+    s_w = t.broadcast_weight_scale(params["s_w"])            # (kt, co)
+    places = place_values(cfg.weight_bits, cfg.cell_bits)    # (S,)
+    deq = places[:, None, None] * s_w[None]                  # (S, kt, co)
+    y = jnp.einsum("bhwstc,stc->bhwc", psum.astype(jnp.float32), deq)
+    y = y * jnp.maximum(s_a, 1e-9)
+    return y.astype(compute_dtype)
+
+
+def calibrate_cim_conv(x, params, cfg: CIMConfig, *, stride: int = 1,
+                       padding: str = "SAME") -> Dict[str, jnp.ndarray]:
+    """One-batch LSQ-style calibration of s_a and s_p for a conv layer."""
+    if not cfg.enabled:
+        return params
+    kh, kw, c_in, c_out = params["w"].shape
+    t, c_per_array = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows,
+                                 cfg.array_cols, cfg.weight_bits, cfg.cell_bits)
+    p = dict(params)
+    _, qp_a = qrange(cfg.act_bits, cfg.act_signed)
+    p["s_a"] = (2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(max(qp_a, 1)))
+                ).reshape(1).astype(jnp.float32) + 1e-9
+
+    a_int, _ = _quantize_act(x, p, cfg)
+    w_int = _quantize_conv_weight_int(p, cfg, t, c_per_array, kh, kw, c_in, c_out)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
+    n_split = digits.shape[0]
+    k_tiles = t.k_tiles
+    c_pad = k_tiles * c_per_array - c_in
+    a_p = jnp.pad(a_int, ((0, 0), (0, 0), (0, 0), (0, c_pad)))
+    d_p = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, c_pad), (0, 0)))
+    d_g = d_p.reshape(n_split, kh, kw, k_tiles, c_per_array, c_out)
+    d_g = jnp.transpose(d_g, (1, 2, 4, 0, 3, 5)).reshape(
+        kh, kw, c_per_array, n_split * k_tiles * c_out)
+    a_g = jnp.tile(a_p, (1, 1, 1, n_split))
+    psum = jax.lax.conv_general_dilated(
+        a_g.astype(jnp.float32), d_g.astype(jnp.float32), (stride, stride),
+        padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=n_split * k_tiles)
+    b, ho, wo, _ = psum.shape
+    psum = psum.reshape(-1, n_split, k_tiles, c_out)
+    mean_abs = jnp.mean(jnp.abs(psum), axis=0)               # (S, kt, co)
+    _, qp_p = qrange(cfg.psum_bits, True)
+    pg = cfg.psum_granularity
+    if pg == Granularity.LAYER:
+        s = jnp.mean(mean_abs, axis=(1, 2), keepdims=True)
+    elif pg == Granularity.ARRAY:
+        pad_n = t.n_tiles * t.oc_per_array - t.n
+        ma = jnp.pad(mean_abs, ((0, 0), (0, 0), (0, pad_n)))
+        s = jnp.mean(ma.reshape(t.n_split, t.k_tiles, t.n_tiles,
+                                t.oc_per_array), axis=-1)
+    else:
+        s = mean_abs
+    p["s_p"] = (2.0 * s / jnp.sqrt(float(max(qp_p, 1)))).astype(jnp.float32) + 1e-9
+    return p
+
+
+def conv_dequant_muls(params, cfg: CIMConfig) -> int:
+    """Paper Fig. 8 x-axis: dequant scale multiplications for this layer."""
+    kh, kw, c_in, c_out = params["w"].shape
+    t, _ = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                       cfg.weight_bits, cfg.cell_bits)
+    return t.dequant_muls(cfg.weight_granularity, cfg.psum_granularity)

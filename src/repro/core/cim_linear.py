@@ -1,0 +1,313 @@
+"""CIM-mapped linear layer with column-wise weight + partial-sum quantization.
+
+This is the paper's technique (§III-A, Eqs. 1-4) as a composable JAX module
+usable by any architecture whose FLOPs live in stored-weight matmuls.
+
+Three modes:
+
+  off      plain matmul in the compute dtype (full-precision baseline).
+  emulate  paper-faithful QAT path: LSQ fake-quant of activations and
+           weights (at the configured granularity), bit-split digits,
+           per-array integer partial sums, ADC quantization of each
+           (split, array, column) partial sum with learnable scales,
+           fused dequantization s_a * s_w * s_p * 2^(c*s), shift-and-add.
+  deploy   packed-int inference path: identical arithmetic evaluated by
+           the Pallas kernel (kernels/cim_matmul) from pre-quantized int8
+           digit planes - bit-exact with ``emulate`` (tests assert), but
+           weights live in HBM as int8 so the memory-roofline term drops.
+
+The partial-sum tensor in ``emulate`` has shape (..., n_split, k_tiles, N);
+the Pallas kernel never materializes it in HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bitsplit import place_values, split_digits
+from .granularity import ArrayTiling, Granularity
+from .quantizer import init_scale_from, lsq_fake_quant, qrange
+from .variation import apply_cell_variation
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    """Quantization + CIM-mapping configuration (paper Table II knobs)."""
+
+    enabled: bool = False
+    mode: str = "emulate"            # off | emulate | deploy
+    weight_bits: int = 4
+    cell_bits: int = 2
+    act_bits: int = 8
+    psum_bits: int = 4
+    array_rows: int = 128
+    array_cols: int = 128
+    weight_granularity: Granularity = Granularity.COLUMN
+    psum_granularity: Granularity = Granularity.COLUMN
+    act_signed: bool = True
+    psum_quant: bool = True          # False -> paper's "w/o PSQ" baselines
+    variation_std: float = 0.0       # eval-time log-normal cell noise
+    use_kernel: bool = True          # deploy: Pallas kernel vs jnp reference
+    pack_dtype: str = "int8"         # deploy digit storage: int8 | int4
+
+    def tiling(self, k: int, n: int) -> ArrayTiling:
+        return ArrayTiling(
+            k=k, n=n,
+            array_rows=self.array_rows, array_cols=self.array_cols,
+            weight_bits=self.weight_bits, cell_bits=self.cell_bits,
+        )
+
+    def replace(self, **kw) -> "CIMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_cim_linear(
+    key: jax.Array, k: int, n: int, cfg: CIMConfig, w_init_scale: float | None = None,
+    dtype=jnp.float32,
+) -> Dict[str, jnp.ndarray]:
+    """Initialize {w, s_w, s_p, s_a} for a (k, n) CIM linear layer."""
+    std = w_init_scale if w_init_scale is not None else (1.0 / jnp.sqrt(k))
+    w = (jax.random.normal(key, (k, n), jnp.float32) * std).astype(dtype)
+    params: Dict[str, jnp.ndarray] = {"w": w}
+    if cfg.enabled:
+        t = cfg.tiling(k, n)
+        wg, pg = cfg.weight_granularity, cfg.psum_granularity
+        params["s_w"] = weight_scales_from(w.astype(jnp.float32), cfg)
+        # psum scale init: |P| ~ sqrt(rows)*E|a_int|*E|digit|; refined by
+        # calibrate_cim() on the first batch and learned thereafter.
+        _, qp_p = qrange(cfg.psum_bits, True)
+        p_mag = jnp.sqrt(float(t.array_rows)) * (2 ** (cfg.act_bits - 2)) * (2 ** (cfg.cell_bits - 1)) / 2.0
+        params["s_p"] = jnp.full(t.psum_scale_shape(pg), 2.0 * p_mag / jnp.sqrt(float(max(qp_p, 1))), jnp.float32)
+        params["s_a"] = jnp.asarray([1.0], jnp.float32)
+    return params
+
+
+def weight_scales_from(w: jnp.ndarray, cfg: CIMConfig) -> jnp.ndarray:
+    """Per-group LSQ scale init, s = 2 E|w|_group / sqrt(q_p) — the
+    column-wise groups are each array column's weights (paper §III-A)."""
+    k, n = w.shape
+    t = cfg.tiling(k, n)
+    _, qp = qrange(cfg.weight_bits, True)
+    pad_k = t.k_padded - k
+    w_abs = jnp.abs(jnp.pad(w, ((0, pad_k), (0, 0))))
+    w_t = w_abs.reshape(t.k_tiles, t.array_rows, n)
+    # real (unpadded) rows per tile
+    rows = jnp.minimum(
+        jnp.full((t.k_tiles,), t.array_rows),
+        k - jnp.arange(t.k_tiles) * t.array_rows).astype(jnp.float32)
+    m_col = w_t.sum(axis=1) / rows[:, None]
+    g = cfg.weight_granularity
+    if g == Granularity.COLUMN:
+        s = m_col                                          # (kt, n)
+    elif g == Granularity.ARRAY:
+        pad_n = t.n_tiles * t.oc_per_array - n
+        mc = jnp.pad(m_col, ((0, 0), (0, pad_n)))
+        s = mc.reshape(t.k_tiles, t.n_tiles, t.oc_per_array).mean(-1)
+    else:
+        s = jnp.mean(m_col, keepdims=True).reshape(1, 1)
+    return (2.0 * s / jnp.sqrt(float(max(qp, 1)))).astype(jnp.float32) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+
+def _full_weight_scale(params, t: ArrayTiling) -> jnp.ndarray:
+    """(k_tiles, N) weight scale, differentiable w.r.t. the parameter."""
+    return t.broadcast_weight_scale(params["s_w"])
+
+
+def _full_psum_scale(params, t: ArrayTiling) -> jnp.ndarray:
+    """(n_split, k_tiles, N) psum scale, differentiable w.r.t. the param."""
+    return t.broadcast_psum_scale(params["s_p"])
+
+
+def _quantize_weight_int(params, cfg: CIMConfig, t: ArrayTiling) -> jnp.ndarray:
+    """Integer weight codes (K, N), float dtype, LSQ gradients attached."""
+    w = params["w"].astype(jnp.float32)
+    s_w = _full_weight_scale(params, t)                       # (kt, N)
+    s_full = jnp.repeat(s_w, t.array_rows, axis=0)[: t.k]     # (K, N)
+    w_hat = lsq_fake_quant(
+        w, s_full, cfg.weight_bits, signed=True,
+        group_size=t.weight_group_size(cfg.weight_granularity))
+    return w_hat / jnp.maximum(s_full, 1e-9)
+
+
+def _quantize_act(x, params, cfg: CIMConfig):
+    """Returns (a_int, s_a) - integer activation codes and their scale."""
+    s_a = params["s_a"]
+    a_hat = lsq_fake_quant(x.astype(jnp.float32), s_a, cfg.act_bits,
+                           signed=cfg.act_signed)
+    return a_hat / jnp.maximum(s_a, 1e-9), s_a
+
+
+def _tile_inputs(a_int: jnp.ndarray, t: ArrayTiling) -> jnp.ndarray:
+    """(..., K) -> (..., k_tiles, rows) with zero padding."""
+    pad = t.k_padded - a_int.shape[-1]
+    if pad:
+        a_int = jnp.pad(a_int, [(0, 0)] * (a_int.ndim - 1) + [(0, pad)])
+    return a_int.reshape(a_int.shape[:-1] + (t.k_tiles, t.array_rows))
+
+
+def _tile_digits(digits: jnp.ndarray, t: ArrayTiling) -> jnp.ndarray:
+    """(S, K, N) -> (S, k_tiles, rows, N) with zero padding."""
+    pad = t.k_padded - digits.shape[1]
+    if pad:
+        digits = jnp.pad(digits, ((0, 0), (0, pad), (0, 0)))
+    return digits.reshape(t.n_split, t.k_tiles, t.array_rows, t.n)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def cim_linear(
+    x: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    cfg: CIMConfig,
+    *,
+    variation_key: Optional[jax.Array] = None,
+    compute_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Apply a CIM linear layer: x (..., K) @ w (K, N) -> (..., N)."""
+    if not cfg.enabled or cfg.mode == "off":
+        w = params["w"].astype(compute_dtype)
+        return jnp.dot(x.astype(compute_dtype), w)
+    if cfg.mode == "emulate":
+        return _forward_emulate(x, params, cfg, variation_key, compute_dtype)
+    if cfg.mode == "deploy":
+        return _forward_deploy(x, params, cfg, variation_key, compute_dtype)
+    raise ValueError(f"unknown CIM mode {cfg.mode!r}")
+
+
+def _forward_emulate(x, params, cfg, variation_key, compute_dtype):
+    k, n = params["w"].shape
+    t = cfg.tiling(k, n)
+
+    a_int, s_a = _quantize_act(x, params, cfg)                # (..., K)
+    w_int = _quantize_weight_int(params, cfg, t)              # (K, N)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)  # (S,K,N)
+    if variation_key is not None and cfg.variation_std > 0:
+        digits = apply_cell_variation(digits, variation_key, cfg.variation_std)
+
+    a_t = _tile_inputs(a_int, t).astype(compute_dtype)        # (..., kt, r)
+    d_t = _tile_digits(digits, t).astype(compute_dtype)       # (S, kt, r, N)
+
+    # integer column MACs: one per (split, array-tile, column)
+    psum = jnp.einsum("...tr,strn->...stn", a_t, d_t,
+                      preferred_element_type=jnp.float32)     # (...,S,kt,N)
+
+    if cfg.psum_quant:
+        # psums are integer-valued (int x int MACs); snap float roundoff to
+        # the grid so ADC tie-breaking matches the deploy kernel bit-exactly
+        psum = psum + jax.lax.stop_gradient(jnp.round(psum) - psum)
+        s_p = _full_psum_scale(params, t)                     # (S, kt, N)
+        psum = lsq_fake_quant(psum, s_p, cfg.psum_bits, signed=True)
+
+    # fused dequantization (paper Eq. 3 / Fig. 4d): one scale per column
+    s_w = _full_weight_scale(params, t)                       # (kt, N)
+    places = place_values(cfg.weight_bits, cfg.cell_bits)     # (S,)
+    deq = (places[:, None, None] * s_w[None, :, :])           # (S, kt, N)
+    y = jnp.einsum("...stn,stn->...n", psum.astype(jnp.float32), deq)
+    y = y * jnp.maximum(s_a, 1e-9)
+    return y.astype(compute_dtype)
+
+
+def _forward_deploy(x, params, cfg, variation_key, compute_dtype):
+    """Inference from packed int digit planes (see pack_deploy)."""
+    from repro.kernels import ops as kops  # lazy: avoids import cycle
+
+    digits = params["w_digits"]                               # int (S,kt,r,N)
+    if variation_key is not None and cfg.variation_std > 0:
+        digits = apply_cell_variation(
+            digits.astype(jnp.float32), variation_key, cfg.variation_std)
+
+    s_a = params["s_a"]
+    qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
+    a_int = jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(s_a, 1e-9)),
+                     qn_a, qp_a)
+    # logical K from the activation; tiling geometry from the digit planes
+    t = cfg.tiling(x.shape[-1], digits.shape[-1])
+    assert t.k_tiles == digits.shape[1] and t.array_rows == digits.shape[2], \
+        (t.k_tiles, t.array_rows, digits.shape)
+    a_t = _tile_inputs(a_int, t)
+
+    s_p = _full_psum_scale(params, t)
+    s_w = _full_weight_scale(params, t)
+    places = place_values(cfg.weight_bits, cfg.cell_bits)
+    deq = places[:, None, None] * s_w[None] * jnp.maximum(s_a, 1e-9)
+
+    y = kops.cim_matmul(
+        a_t, digits, s_p, deq,
+        psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
+        use_kernel=cfg.use_kernel,
+    )
+    return y.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# packing + calibration
+# ---------------------------------------------------------------------------
+
+def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
+    """Convert trained emulate-mode params into the packed deploy form.
+
+    pack_dtype='int4' stores each digit plane as int4 (sign-magnitude
+    digits of <=3-bit cells fit [-7, 7]) — halves weight HBM vs int8 and
+    is the deploy dtype the decode roofline uses."""
+    k, n = params["w"].shape
+    t = cfg.tiling(k, n)
+    w_int = _quantize_weight_int(params, cfg, t)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
+    store = jnp.int4 if (cfg.pack_dtype == "int4"
+                         and cfg.cell_bits <= 3) else jnp.int8
+    d_t = _tile_digits(digits, t).astype(store)
+    out = {
+        "w_digits": d_t,
+        "s_w": params["s_w"],
+        "s_p": params["s_p"],
+        "s_a": params["s_a"],
+        "k_logical": jnp.asarray(k, jnp.int32),
+    }
+    return out
+
+
+def calibrate_cim(x, params, cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
+    """One-batch calibration of s_a and s_p (LSQ-style init from stats)."""
+    if not cfg.enabled:
+        return params
+    k, n = params["w"].shape
+    t = cfg.tiling(k, n)
+    p = dict(params)
+    _, qp_a = qrange(cfg.act_bits, cfg.act_signed)
+    p["s_a"] = (2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(max(qp_a, 1)))
+                ).reshape(1).astype(jnp.float32) + 1e-9
+
+    a_int, _ = _quantize_act(x, p, cfg)
+    w_int = _quantize_weight_int(p, cfg, t)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
+    a_t = _tile_inputs(a_int, t)
+    d_t = _tile_digits(digits, t)
+    psum = jnp.einsum("...tr,strn->...stn", a_t, d_t,
+                      preferred_element_type=jnp.float32)
+    flat = psum.reshape((-1,) + psum.shape[-3:])              # (B*, S, kt, N)
+    _, qp_p = qrange(cfg.psum_bits, True)
+    mean_abs = jnp.mean(jnp.abs(flat), axis=0)                # (S, kt, N)
+    pg = cfg.psum_granularity
+    if pg == Granularity.LAYER:
+        s = jnp.mean(mean_abs, axis=(1, 2), keepdims=True)
+    elif pg == Granularity.ARRAY:
+        pad_n = t.n_tiles * t.oc_per_array - t.n
+        ma = jnp.pad(mean_abs, ((0, 0), (0, 0), (0, pad_n)))
+        s = jnp.mean(ma.reshape(t.n_split, t.k_tiles, t.n_tiles, t.oc_per_array), axis=-1)
+    else:
+        s = mean_abs
+    p["s_p"] = (2.0 * s / jnp.sqrt(float(max(qp_p, 1)))).astype(jnp.float32) + 1e-9
+    return p

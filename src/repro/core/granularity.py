@@ -1,0 +1,174 @@
+"""Quantization granularity accounting for CIM arrays.
+
+The paper's central object: a weight matrix W (K, N) is tiled into CIM
+arrays of ``array_rows`` x ``array_cols`` cells. A b-bit weight occupies
+``n_split = ceil(weight_bits / cell_bits)`` physical columns (bit-splits),
+so an array holds ``oc_per_array = array_cols // n_split`` output channels.
+
+Granularity defines which elements share one quantization scale factor:
+
+  LAYER  - one scale for the whole layer              (paper Fig. 1a/d)
+  ARRAY  - one scale per CIM array                    (paper Fig. 1b/e)
+  COLUMN - one scale per physical array column        (paper Fig. 1c/f)
+
+For weights the scale is indexed (k_tile, col); for partial sums the ADC
+digitizes each (split, k_tile, col) physical column separately so scales
+are indexed (split, k_tile, col). Scale *parameter* shapes collapse the
+shared axes; ``broadcast_*`` expands them back for arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+class Granularity(str, enum.Enum):
+    LAYER = "layer"
+    ARRAY = "array"
+    COLUMN = "column"
+
+
+def n_splits(weight_bits: int, cell_bits: int) -> int:
+    return int(math.ceil(weight_bits / cell_bits))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayTiling:
+    """Static tiling of a (K, N) weight matrix onto CIM arrays."""
+
+    k: int                  # logical contraction dim (rows of W)
+    n: int                  # logical output dim (columns of W)
+    array_rows: int
+    array_cols: int
+    weight_bits: int
+    cell_bits: int
+
+    @property
+    def n_split(self) -> int:
+        return n_splits(self.weight_bits, self.cell_bits)
+
+    @property
+    def k_tiles(self) -> int:
+        return int(math.ceil(self.k / self.array_rows))
+
+    @property
+    def k_padded(self) -> int:
+        return self.k_tiles * self.array_rows
+
+    @property
+    def oc_per_array(self) -> int:
+        return max(1, self.array_cols // self.n_split)
+
+    @property
+    def n_tiles(self) -> int:
+        """Arrays along the output dim."""
+        return int(math.ceil(self.n / self.oc_per_array))
+
+    @property
+    def n_arrays(self) -> int:
+        return self.k_tiles * self.n_tiles
+
+    # -- scale parameter shapes ------------------------------------------------
+    def weight_scale_shape(self, g: Granularity) -> Tuple[int, ...]:
+        if g == Granularity.LAYER:
+            return (1, 1)
+        if g == Granularity.ARRAY:
+            return (self.k_tiles, self.n_tiles)
+        return (self.k_tiles, self.n)
+
+    def psum_scale_shape(self, g: Granularity) -> Tuple[int, ...]:
+        if g == Granularity.LAYER:
+            return (self.n_split, 1, 1)
+        if g == Granularity.ARRAY:
+            return (self.n_split, self.k_tiles, self.n_tiles)
+        return (self.n_split, self.k_tiles, self.n)
+
+    # -- broadcasting to full logical shape -------------------------------------
+    def broadcast_weight_scale(self, s: jnp.ndarray) -> jnp.ndarray:
+        """Expand a weight-scale parameter to shape (k_tiles, N)."""
+        if s.shape == (1, 1):
+            return jnp.broadcast_to(s, (self.k_tiles, self.n))
+        if s.shape == (self.k_tiles, self.n_tiles):
+            rep = jnp.repeat(s, self.oc_per_array, axis=1)
+            return rep[:, : self.n]
+        assert s.shape == (self.k_tiles, self.n), s.shape
+        return s
+
+    def broadcast_psum_scale(self, s: jnp.ndarray) -> jnp.ndarray:
+        """Expand a psum-scale parameter to shape (n_split, k_tiles, N)."""
+        if s.shape == (self.n_split, 1, 1):
+            return jnp.broadcast_to(s, (self.n_split, self.k_tiles, self.n))
+        if s.shape == (self.n_split, self.k_tiles, self.n_tiles):
+            rep = jnp.repeat(s, self.oc_per_array, axis=2)
+            return rep[:, :, : self.n]
+        assert s.shape == (self.n_split, self.k_tiles, self.n), s.shape
+        return s
+
+    # -- per-group element counts (LSQ gradient scaling) -------------------------
+    def weight_group_size(self, g: Granularity) -> int:
+        if g == Granularity.LAYER:
+            return self.k * self.n
+        if g == Granularity.ARRAY:
+            return self.array_rows * self.oc_per_array
+        return self.array_rows
+
+    # -- hardware accounting (paper Fig. 4 / Fig. 8) ----------------------------
+    def dequant_muls(self, weight_g: Granularity, psum_g: Granularity) -> int:
+        """Scale multiplications needed to dequantize one layer's outputs.
+
+        Reproduces the paper's Fig. 4 accounting: the fused scale
+        ``s_w * s_p`` is applied once per distinct (weight-group, psum-group)
+        pair that reaches the shift-and-add stage.  Aligning both at COLUMN
+        costs exactly as much as LAYER-weight + COLUMN-psum — the paper's key
+        zero-overhead observation.
+        """
+        order = {Granularity.LAYER: 0, Granularity.ARRAY: 1, Granularity.COLUMN: 2}
+        finest = weight_g if order[weight_g] >= order[psum_g] else psum_g
+        if finest == Granularity.LAYER:
+            return 1
+        if finest == Granularity.ARRAY:
+            # one mul per output-channel per array (paper: n_array * n_oc)
+            return self.n_arrays * self.oc_per_array
+        # one mul per physical column (paper: n_split * n_array * n_oc)
+        return self.n_split * self.n_arrays * self.oc_per_array
+
+
+def conv_tiling(
+    kh: int,
+    kw: int,
+    c_in: int,
+    c_out: int,
+    array_rows: int,
+    array_cols: int,
+    weight_bits: int,
+    cell_bits: int,
+) -> Tuple[ArrayTiling, int]:
+    """Tiling for a conv layer under the paper's stretched-kernel rule.
+
+    The paper's novel tiling (§III-C) keeps every stretched kernel column
+    intact inside one array: the tiling stride along the contraction dim is
+    ``c_per_array * kh * kw`` with ``c_per_array = floor(rows / (kh*kw))``,
+    i.e. an array holds a slice of input channels with *all* their taps.
+    The array MAC is then a convolution over that channel slice, which we
+    realize as one grouped convolution (groups = k_tiles).
+
+    Returns the tiling (with array_rows snapped to the used rows) and
+    ``c_per_array``.
+    """
+    taps = kh * kw
+    c_per_array = max(1, array_rows // taps)
+    used_rows = c_per_array * taps
+    k_tiles = int(math.ceil(c_in / c_per_array))
+    tiling = ArrayTiling(
+        k=k_tiles * used_rows,  # padded stretched length
+        n=c_out,
+        array_rows=used_rows,
+        array_cols=array_cols,
+        weight_bits=weight_bits,
+        cell_bits=cell_bits,
+    )
+    return tiling, c_per_array

@@ -1,0 +1,142 @@
+"""Learned Step Size Quantization (LSQ, Esser et al. 2020) at arbitrary
+granularity, as extended by the paper (§III-A) to column-wise scales for
+both weights and partial sums.
+
+All quantizers are fake-quant: they return float tensors whose values lie
+on the integer grid times the (learnable) scale. Gradients follow LSQ:
+
+  dy/dx = 1                      inside the clip range, 0 outside
+  dy/ds = -x/s + round(x/s)      inside the clip range
+        = q_n or q_p             outside
+  with the scale gradient multiplied by g = 1/sqrt(N_group * q_p).
+
+``bits == 1`` is binary sign quantization (Saxena'22-style ADC-less
+partial sums): y = sign(x) * s with an STE through the sign.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def qrange(bits: int, signed: bool = True) -> Tuple[int, int]:
+    if bits == 1:
+        return (-1, 1)
+    if signed:
+        return (-(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+    return (0, 2 ** bits - 1)
+
+
+def round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Round with straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+@jax.custom_vjp
+def _lsq(x, s, qn, qp, g):
+    s = jnp.maximum(s, _EPS)
+    return jnp.clip(jnp.round(x / s), qn, qp) * s
+
+
+def _lsq_fwd(x, s, qn, qp, g):
+    s = jnp.maximum(s, _EPS)
+    v = x / s
+    return jnp.clip(jnp.round(v), qn, qp) * s, (v, s, qn, qp, g)
+
+
+def _lsq_bwd(res, dy):
+    v, s, qn, qp, g = res
+    lower = v <= qn
+    upper = v >= qp
+    mid = jnp.logical_not(jnp.logical_or(lower, upper))
+    dx = jnp.where(mid, dy, 0.0)
+    ds_elem = jnp.where(mid, jnp.round(v) - v, jnp.where(lower, qn, qp))
+    ds_full = dy * ds_elem * g
+    # reduce to the scale's (broadcasted-from) shape
+    ds = _reduce_to_shape(ds_full, s.shape)
+    return dx, ds, None, None, None
+
+
+def _reduce_to_shape(t: jnp.ndarray, shape) -> jnp.ndarray:
+    if t.shape == tuple(shape):
+        return t
+    # sum over leading extra dims
+    while t.ndim > len(shape):
+        t = t.sum(axis=0)
+    axes = tuple(i for i, (a, b) in enumerate(zip(t.shape, shape)) if b == 1 and a != 1)
+    if axes:
+        t = t.sum(axis=axes, keepdims=True)
+    return t.reshape(shape)
+
+
+_lsq.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+@jax.custom_vjp
+def _lsq_binary(x, s, g):
+    s = jnp.maximum(s, _EPS)
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype) * s
+
+
+def _lsq_binary_fwd(x, s, g):
+    s = jnp.maximum(s, _EPS)
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype) * s, (x, s, g)
+
+
+def _lsq_binary_bwd(res, dy):
+    x, s, g = res
+    # STE with clipping window |x| <= s (hard-tanh style)
+    mid = jnp.abs(x) <= s
+    dx = jnp.where(mid, dy, 0.0)
+    sign = jnp.where(x >= 0, 1.0, -1.0)
+    ds = _reduce_to_shape(dy * sign * g, s.shape)
+    return dx, ds, None
+
+
+_lsq_binary.defvjp(_lsq_binary_fwd, _lsq_binary_bwd)
+
+
+def lsq_fake_quant(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int,
+    *,
+    signed: bool = True,
+    group_size: int | None = None,
+) -> jnp.ndarray:
+    """Fake-quantize ``x`` with learnable ``scale`` (broadcastable to x)."""
+    qn, qp = qrange(bits, signed)
+    n = group_size if group_size is not None else max(1, x.size // max(1, scale.size))
+    g = 1.0 / jnp.sqrt(float(n) * float(max(qp, 1)))
+    if bits == 1:
+        return _lsq_binary(x, scale, g)
+    return _lsq(x, scale, float(qn), float(qp), g)
+
+
+def lsq_integer(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int,
+    *,
+    signed: bool = True,
+    group_size: int | None = None,
+) -> jnp.ndarray:
+    """Return the *integer* code (float dtype, integer valued) with LSQ
+    gradients flowing to both ``x`` and ``scale``: equals
+    ``lsq_fake_quant(x, s, ...) / s`` computed stably."""
+    s = jnp.maximum(scale, _EPS)
+    return lsq_fake_quant(x, scale, bits, signed=signed, group_size=group_size) / s
+
+
+def init_scale_from(x: jnp.ndarray, bits: int, axes, shape) -> jnp.ndarray:
+    """LSQ initialization: s = 2 * E|x| / sqrt(q_p), per group."""
+    _, qp = qrange(bits, True)
+    m = jnp.mean(jnp.abs(x), axis=axes)
+    s = 2.0 * m / jnp.sqrt(float(max(qp, 1)))
+    if s.ndim == 0:
+        return jnp.full(shape, s, jnp.float32) + _EPS
+    return jnp.broadcast_to(s.reshape(shape), shape).astype(jnp.float32) + _EPS

@@ -1,0 +1,21 @@
+"""Memory-cell variation model (paper §IV-E, Eq. 5).
+
+Device non-idealities are modeled as multiplicative log-normal noise on the
+stored cell conductances: w_var = w * exp(theta), theta ~ N(0, sigma^2).
+The noise is applied to the *bit-split cell values* (each physical cell
+drifts independently), which is where real RRAM variation acts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_cell_variation(
+    digits: jnp.ndarray, key: jax.Array, sigma: float
+) -> jnp.ndarray:
+    """Perturb cell values: d -> d * exp(theta), theta ~ N(0, sigma)."""
+    if sigma <= 0.0:
+        return digits
+    theta = sigma * jax.random.normal(key, digits.shape, dtype=jnp.float32)
+    return (digits.astype(jnp.float32) * jnp.exp(theta)).astype(digits.dtype)

@@ -1,0 +1,5 @@
+from .pipeline import (lm_batch_specs, make_image_dataset, make_lm_pipeline,
+                       synth_classification_batch)
+
+__all__ = ["lm_batch_specs", "make_image_dataset", "make_lm_pipeline",
+           "synth_classification_batch"]

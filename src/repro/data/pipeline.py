@@ -1,0 +1,96 @@
+"""Deterministic synthetic data pipelines.
+
+Offline box: no CIFAR/ImageNet/corpora. Pipelines are (a) deterministic in
+(seed, step) so restarts resume mid-epoch without data skew — the property
+a production loader must have for fault tolerance — and (b) *learnable*
+(structured, not iid noise) so QAT/accuracy benchmarks produce meaningful
+orderings.
+
+LM stream: a mixture of k-gram Markov chains per "document" with repeats —
+cross-entropy drops well below uniform when the model learns.
+Image set: class-conditional Gabor-like templates + noise; linear probes
+get ~chance, convnets separate them — enough signal to rank quantization
+schemes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token stream
+# ---------------------------------------------------------------------------
+
+def _markov_tokens(key, batch, seq_len, vocab, order_states: int = 64):
+    """Sample from a random sparse transition table; highly predictable."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    # per-state candidate next tokens drawn from a concentrated sub-vocab:
+    # the unigram structure alone gives a fast, reliable loss drop (from
+    # log(vocab) toward log(active)), and the chain adds bigram signal
+    table = jax.random.randint(k1, (order_states, 4), 0, min(64, vocab))
+    start = jax.random.randint(k2, (batch,), 0, order_states)
+
+    def step(state, k):
+        choice = jax.random.randint(k, (batch,), 0, 4)
+        tok = table[state % order_states, choice]
+        return (state * 31 + tok) % order_states, tok
+
+    keys = jax.random.split(k3, seq_len)
+    _, toks = jax.lax.scan(step, start, keys)
+    return toks.T                                            # (batch, seq)
+
+
+def make_lm_pipeline(*, vocab: int, seq_len: int, global_batch: int,
+                     seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields {"tokens": (B, T+1) int32} — model input is [:, :-1], labels
+    [:, 1:]. Deterministic in (seed, step)."""
+    step = 0
+    fn = jax.jit(_markov_tokens, static_argnums=(1, 2, 3))
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        toks = fn(key, global_batch, seq_len + 1, vocab)
+        yield {"tokens": np.asarray(toks, np.int32)}
+        step += 1
+
+
+def lm_batch_specs(seq_len: int, global_batch: int):
+    return {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len + 1),
+                                           jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# synthetic image classification (paper's CIFAR stand-in)
+# ---------------------------------------------------------------------------
+
+def make_image_dataset(n_classes: int = 10, hw: int = 32, n: int = 2048,
+                       seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Class-conditional structured images: each class is a fixed random
+    low-frequency template; samples = template + small noise + random
+    shift. Returns (x (N,H,W,3) float32 in [-1,1], y (N,) int32)."""
+    rng = np.random.RandomState(seed)
+    # low-frequency templates via random 8x8 upsampled to hw
+    base = rng.randn(n_classes, 8, 8, 3).astype(np.float32)
+    templates = np.stack([
+        np.stack([np.kron(base[c, :, :, ch], np.ones((hw // 8, hw // 8)))
+                  for ch in range(3)], axis=-1)
+        for c in range(n_classes)])
+    templates /= np.abs(templates).max(axis=(1, 2, 3), keepdims=True) + 1e-6
+    y = rng.randint(0, n_classes, size=n).astype(np.int32)
+    x = templates[y]
+    # random circular shifts + noise
+    sh = rng.randint(-4, 5, size=(n, 2))
+    for i in range(n):
+        x[i] = np.roll(x[i], sh[i], axis=(0, 1))
+    x = x + 0.25 * rng.randn(*x.shape).astype(np.float32)
+    return np.clip(x, -2, 2), y
+
+
+def synth_classification_batch(x, y, batch: int, step: int, seed: int = 0):
+    rng = np.random.RandomState(seed * 100003 + step)
+    idx = rng.randint(0, x.shape[0], size=batch)
+    return x[idx], y[idx]

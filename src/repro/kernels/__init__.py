@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spot: the fused
+# bit-split x array-tiled CIM matmul with in-VMEM partial-sum (ADC)
+# quantization. ops.py = jitted wrappers, ref.py = pure-jnp oracles.
+from . import ops, ref
+from .cim_matmul import cim_matmul_pallas
+
+__all__ = ["ops", "ref", "cim_matmul_pallas"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused CIM matmul with partial-sum (ADC) quantization.
+
+TPU-native realization of the paper's array pipeline (DESIGN.md §2): the
+CIM array boundary becomes the K-grid dimension of a tiled matmul, and the
+ADC's per-column quantization is applied to each array-tile's accumulator
+*in VMEM* before cross-array shift-and-add — the (M, S, kt, N) partial-sum
+tensor that the pure-JAX emulate path materializes in HBM never leaves
+VMEM here.
+
+Grid: (M/bm, N/bn, k_tiles, n_split); the two reduction dims (array tile
+t, bit-split s) iterate fastest so output-block revisits are consecutive
+and the accumulation stays resident.
+
+Block shapes (VMEM working set per step, bm=bn=128, rows=256, f32):
+  a:      (bm, 1, rows)        128*256*4   = 128 KiB
+  digits: (1, 1, rows, bn)     256*128*4   = 128 KiB (int8 in HBM, cast on load)
+  scales: 2 x (1, 1, bn)                  ~= 1 KiB
+  out:    (bm, bn)             128*128*4   =  64 KiB
+comfortably inside the ~16 MiB VMEM budget; MXU dims are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, d_ref, sp_ref, deq_ref, o_ref, *, psum_bits: int,
+            psum_quant: bool):
+    t = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(t == 0, s == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[:, 0, :].astype(jnp.float32)          # (bm, rows)
+    d = d_ref[0, 0].astype(jnp.float32)             # (rows, bn)
+    p = jnp.dot(a, d, preferred_element_type=jnp.float32)  # (bm, bn) column MACs
+
+    if psum_quant:
+        p = jnp.round(p)    # integer-valued MACs: kill float roundoff
+        sp = jnp.maximum(sp_ref[0, 0, :].astype(jnp.float32), 1e-9)  # (bn,)
+        if psum_bits == 1:
+            p = jnp.where(p >= 0, 1.0, -1.0) * sp[None, :]
+        else:
+            qn = float(-(2 ** (psum_bits - 1)))
+            qp = float(2 ** (psum_bits - 1) - 1)
+            p = jnp.clip(jnp.round(p / sp[None, :]), qn, qp) * sp[None, :]
+
+    deq = deq_ref[0, 0, :].astype(jnp.float32)      # (bn,)
+    o_ref[...] += p * deq[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("psum_bits", "psum_quant", "block_m", "block_n",
+                     "interpret"),
+)
+def cim_matmul_pallas(
+    a_t: jnp.ndarray,      # (M, k_tiles, rows) integer-valued
+    digits: jnp.ndarray,   # (S, k_tiles, rows, N)
+    s_p: jnp.ndarray,      # (S, k_tiles, N)
+    deq: jnp.ndarray,      # (S, k_tiles, N)
+    *,
+    psum_bits: int,
+    psum_quant: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, k_tiles, rows = a_t.shape
+    n_split = digits.shape[0]
+    n = digits.shape[-1]
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        a_t = jnp.pad(a_t, ((0, pad_m), (0, 0), (0, 0)))
+    if pad_n:
+        digits = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
+        s_p = jnp.pad(s_p, ((0, 0), (0, 0), (0, pad_n)), constant_values=1.0)
+        deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad_n)))
+    mp, np_ = m + pad_m, n + pad_n
+
+    grid = (mp // bm, np_ // bn, k_tiles, n_split)
+    out = pl.pallas_call(
+        functools.partial(_kernel, psum_bits=psum_bits, psum_quant=psum_quant),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1, rows), lambda i, j, t, s: (i, t, 0)),
+            pl.BlockSpec((1, 1, rows, bn), lambda i, j, t, s: (s, t, 0, j)),
+            pl.BlockSpec((1, 1, bn), lambda i, j, t, s: (s, t, j)),
+            pl.BlockSpec((1, 1, bn), lambda i, j, t, s: (s, t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_t, digits, s_p, deq)
+    return out[:m, :n]

@@ -1,0 +1,57 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``use_kernel=True`` runs the Pallas kernel (interpret mode off-TPU so the
+kernel body is validated on CPU); ``use_kernel=False`` runs the pure-jnp
+oracle — used for allocation-free dry-runs where the HLO must be portable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cim_matmul import cim_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cim_matmul(
+    a_t: jnp.ndarray,
+    digits: jnp.ndarray,
+    s_p: jnp.ndarray,
+    deq: jnp.ndarray,
+    *,
+    psum_bits: int,
+    psum_quant: bool = True,
+    use_kernel: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """CIM matmul over pre-tiled inputs.
+
+    a_t:    (..., k_tiles, rows) integer-valued activations
+    digits: (S, k_tiles, rows, N) int8 cell planes
+    s_p:    (S, k_tiles, N) ADC scales
+    deq:    (S, k_tiles, N) fused dequant scales (2^{cs} * s_w * s_a)
+    returns (..., N) float32
+    """
+    batch_shape = a_t.shape[:-2]
+    m = 1
+    for d in batch_shape:
+        m *= d
+    a2 = a_t.reshape((m,) + a_t.shape[-2:])
+    if use_kernel:
+        out = cim_matmul_pallas(
+            a2, digits, s_p, deq,
+            psum_bits=psum_bits, psum_quant=psum_quant,
+            block_m=block_m, block_n=block_n,
+            interpret=not _on_tpu(),
+        )
+    else:
+        out = ref.cim_matmul_ref(
+            a2, digits, s_p, deq,
+            psum_bits=psum_bits, psum_quant=psum_quant,
+        )
+    return out.reshape(batch_shape + (digits.shape[-1],))

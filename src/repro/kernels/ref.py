@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact arithmetic the kernels must reproduce; tests sweep
+shapes/dtypes and assert allclose against them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adc_quantize_ref(p: jnp.ndarray, s_p: jnp.ndarray, psum_bits: int) -> jnp.ndarray:
+    """ADC model: uniform mid-rise quantization of a partial sum at scale
+    s_p, clipped to the signed psum_bits range. psum_bits == 1 is the
+    binary (sign) ADC-less mode. Partial sums are integer-valued (int x
+    int MACs); snapping to the grid first makes tie-breaking summation-
+    order independent."""
+    p = jnp.round(p)
+    s_p = jnp.maximum(s_p, 1e-9)
+    if psum_bits == 1:
+        return jnp.where(p >= 0, 1.0, -1.0) * s_p
+    qn = -(2 ** (psum_bits - 1))
+    qp = 2 ** (psum_bits - 1) - 1
+    return jnp.clip(jnp.round(p / s_p), qn, qp) * s_p
+
+
+def cim_matmul_ref(
+    a_t: jnp.ndarray,      # (M, k_tiles, rows)    integer-valued float
+    digits: jnp.ndarray,   # (S, k_tiles, rows, N) int8 or float digits
+    s_p: jnp.ndarray,      # (S, k_tiles, N)       psum (ADC) scales
+    deq: jnp.ndarray,      # (S, k_tiles, N)       fused dequant scales
+    *,
+    psum_bits: int,
+    psum_quant: bool = True,
+) -> jnp.ndarray:
+    """CIM matmul oracle: per-(split, array) integer MACs, ADC quantization
+    of each column partial sum, fused dequant, shift-and-add. Returns
+    (M, N) float32."""
+    psum = jnp.einsum(
+        "mtr,strn->mstn",
+        a_t.astype(jnp.float32),
+        digits.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if psum_quant:
+        psum = adc_quantize_ref(psum, s_p[None], psum_bits)
+    return jnp.einsum("mstn,stn->mn", psum, deq.astype(jnp.float32))
+
+
+def lsq_fake_quant_ref(x, s, qn: float, qp: float):
+    s = jnp.maximum(s, 1e-9)
+    return jnp.clip(jnp.round(x / s), qn, qp) * s

@@ -1,0 +1,221 @@
+"""Exact roofline accounting from compiled HLO, correcting for loop bodies.
+
+``cost_analysis()`` (and HLO text) count each loop body ONCE, regardless of
+trip count — scanned layers, microbatch accumulation and chunked-attention
+/ SSD scans would all be undercounted. This module derives exact totals
+with only small compiles:
+
+1. **Layer unrolling + two-point extrapolation.** Lower the cell with
+   ``scan_layers=False`` at two small layer counts L1 < L2 (cheap HLO).
+   Per-layer slope b = (M(L2) - M(L1)) / (L2 - L1); total(L) = M(L1) +
+   b * (L - L1). Heterogeneous stacks (MoE dense+routed, whisper enc/dec)
+   use one extra point per layer kind — an exact linear solve, since
+   layer costs are exactly additive in HLO.
+
+2. **Chunk-scan halving.** Inner scans (flash-attention KV chunks, SSD /
+   mLSTM chunkwise) are loops whose body size is linear in the chunk
+   length c. Lower at c and c/2: body(c) = 2 * (M(c) - M(c/2)); corrected
+   M* = M + (trips - 1) * body(c), trips = ceil(T / c).
+
+Microbatch accumulation is simply lowered with accum=1 (the accounting
+cell), so no correction is needed. sLSTM's per-timestep recurrence
+(~4*nh*hd^2 FLOPs/token, <2% of any xlstm cell) is added analytically.
+
+The production cell (scanned, accumulated, full remat) remains the source
+of memory_analysis — loop buffer reuse is exactly what it models well.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SHAPES, MoEConfig, Shape
+from repro.configs.registry import get_config
+
+
+@dataclasses.dataclass
+class Measurement:
+    flops: float
+    bytes_: float
+    coll: float
+
+    def __add__(self, o):
+        return Measurement(self.flops + o.flops, self.bytes_ + o.bytes_,
+                           self.coll + o.coll)
+
+    def __sub__(self, o):
+        return Measurement(self.flops - o.flops, self.bytes_ - o.bytes_,
+                           self.coll - o.coll)
+
+    def __mul__(self, k: float):
+        return Measurement(self.flops * k, self.bytes_ * k, self.coll * k)
+
+    __rmul__ = __mul__
+
+
+def _measure(arch: str, shape_name: str, mesh, overrides: Dict,
+             cim=None, accum: int = 1, run_overrides: Optional[Dict] = None
+             ) -> Measurement:
+    from .cells import build_cell
+    from .dryrun import collective_bytes_from_hlo
+    ov = dict(overrides)
+    ov["scan_layers"] = False
+    ro = dict(run_overrides or {})
+    if accum > 1:
+        ro["accum_unroll"] = True
+    cell = build_cell(arch, shape_name, mesh, cim=cim, accum=accum,
+                      overrides=ov, run_overrides=ro)
+    compiled = cell.lower().compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return Measurement(float(cost.get("flops", 0.0)),
+                       float(cost.get("bytes accessed", 0.0)),
+                       float(coll["total"]))
+
+
+# ---------------------------------------------------------------------------
+# per-family layer variants: (overrides, layer_vector) points + target vector
+# ---------------------------------------------------------------------------
+
+def _layer_plan(arch: str) -> Tuple[List[Tuple[Dict, Tuple[int, ...]]],
+                                    Tuple[int, ...]]:
+    cfg = get_config(arch)
+    fam = cfg.family
+    if fam == "whisper":
+        pts = [({"enc_layers": 2, "n_layers": 2}, (2, 2)),
+               ({"enc_layers": 4, "n_layers": 2}, (4, 2)),
+               ({"enc_layers": 2, "n_layers": 4}, (2, 4))]
+        return pts, (cfg.enc_layers, cfg.n_layers)
+    if fam == "xlstm":
+        e = cfg.ssm.slstm_every
+        pts = [({"n_layers": e}, (e,)), ({"n_layers": 2 * e}, (2 * e,))]
+        return pts, (cfg.n_layers,)
+    if fam == "zamba2":
+        e = cfg.attn_every
+        pts = [({"n_layers": e}, (e,)), ({"n_layers": 2 * e}, (2 * e,))]
+        return pts, (cfg.n_layers,)
+    if cfg.moe is not None:
+        moe = cfg.moe
+        def m(ld, lm):
+            return {"n_layers": ld + lm,
+                    "moe": dataclasses.replace(moe, n_dense_layers=ld)}
+        pts = [(m(1, 2), (1, 2)), (m(1, 4), (1, 4)), (m(2, 2), (2, 2))]
+        return pts, (moe.n_dense_layers, cfg.n_layers - moe.n_dense_layers)
+    pts = [({"n_layers": 2}, (2,)), ({"n_layers": 4}, (4,))]
+    return pts, (cfg.n_layers,)
+
+
+def _chunk_knobs(arch: str, shape: Shape) -> List[Tuple[str, int, int]]:
+    """[(override_key, full_chunk, trips)] for inner scans in this cell."""
+    cfg = get_config(arch)
+    knobs = []
+    t = shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        c = cfg.attn_chunk
+        has_attn = cfg.family in ("transformer", "llava", "whisper", "zamba2")
+        if has_attn and c and t > c:
+            knobs.append(("attn_chunk", c, int(np.ceil(t / c))))
+        if cfg.family in ("xlstm", "zamba2") and cfg.ssm is not None:
+            cs = cfg.ssm.chunk
+            if t > cs:
+                knobs.append(("ssm_chunk", cs, int(np.ceil(t / cs))))
+    return knobs
+
+
+def _apply_chunk(overrides: Dict, arch: str, key: str, value: int) -> Dict:
+    ov = dict(overrides)
+    if key == "attn_chunk":
+        ov["attn_chunk"] = value
+    else:
+        cfg = get_config(arch)
+        ssm = ov.get("ssm", cfg.ssm)
+        ov["ssm"] = dataclasses.replace(ssm, chunk=value)
+    return ov
+
+
+def _slstm_flops(arch: str, shape: Shape) -> float:
+    """Analytic recurrence FLOPs for xlstm's sLSTM blocks (scan over T is
+    a loop the two-point method cannot see; contribution < 2%)."""
+    cfg = get_config(arch)
+    if cfg.family != "xlstm":
+        return 0.0
+    n_s = sum(1 for i in range(cfg.n_layers)
+              if cfg.ssm.slstm_every and
+              i % cfg.ssm.slstm_every == cfg.ssm.slstm_every - 1)
+    nh = cfg.ssm.n_slstm_heads
+    hd = cfg.d_model // nh
+    per_tok = 4 * 2 * nh * hd * hd          # 4 gates x recurrent matmul
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 3 if shape.kind == "train" else 1   # fwd+bwd
+    return float(n_s * per_tok * tokens * mult)
+
+
+def account_cell(arch: str, shape_name: str, mesh, cim=None,
+                 verbose: bool = True, overrides: Optional[Dict] = None,
+                 run_overrides: Optional[Dict] = None,
+                 accum: Optional[int] = None) -> Dict:
+    """Exact per-device totals (flops, bytes, collective bytes).
+
+    When the production run uses gradient accumulation A > 1, the extra
+    per-microbatch cost (e.g. FSDP weight re-gathers) is measured by an
+    unrolled accum=2 point and extrapolated: total(A) = M(1) + (A-1) *
+    (M(2) - M(1)). Work that only depends on total tokens cancels in the
+    delta, so only genuinely accum-proportional costs scale."""
+    from .cells import make_run_config
+    shape = SHAPES[shape_name]
+    pts, target = _layer_plan(arch)
+    knobs = _chunk_knobs(arch, shape)
+    user_ov = dict(overrides or {})
+    target_accum = (accum if accum is not None
+                    else make_run_config(arch, shape,
+                                         run_overrides=run_overrides
+                                         ).accum_steps)
+
+    corrected: List[Measurement] = []
+    for overrides_pt, lv in pts:
+        base_ov = dict(user_ov)
+        base_ov.update(overrides_pt)
+        for key, c, _tr in knobs:
+            base_ov = _apply_chunk(base_ov, arch, key, c)
+        m = _measure(arch, shape_name, mesh, base_ov, cim=cim,
+                     run_overrides=run_overrides)
+        m_corr = m
+        for key, c, trips in knobs:
+            if trips <= 1:
+                continue
+            half_ov = _apply_chunk(base_ov, arch, key, max(1, c // 2))
+            m_half = _measure(arch, shape_name, mesh, half_ov, cim=cim,
+                              run_overrides=run_overrides)
+            body = 2.0 * (m - m_half)
+            body = Measurement(max(body.flops, 0.0), max(body.bytes_, 0.0),
+                               max(body.coll, 0.0))
+            m_corr = m_corr + (trips - 1) * body
+        if shape.kind == "train" and target_accum > 1:
+            m2 = _measure(arch, shape_name, mesh, base_ov, cim=cim,
+                          accum=2, run_overrides=run_overrides)
+            delta = m2 - m
+            delta = Measurement(max(delta.flops, 0.0),
+                                max(delta.bytes_, 0.0),
+                                max(delta.coll, 0.0))
+            m_corr = m_corr + (target_accum - 1) * delta
+        corrected.append(m_corr)
+
+    # exact linear solve: M = a + sum_i b_i * L_i
+    X = np.array([[1.0] + list(map(float, lv)) for _, lv in pts])
+    out: Dict[str, float] = {}
+    for field in ("flops", "bytes_", "coll"):
+        y = np.array([getattr(m, field) for m in corrected])
+        coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        total = coef[0] + sum(c * l for c, l in zip(coef[1:], target))
+        out[field] = float(max(total, 0.0))
+    out["flops"] += _slstm_flops(arch, shape) / mesh.devices.size
+    if verbose:
+        print(f"[account] {arch} x {shape_name}: per-dev flops "
+              f"{out['flops']:.3e} bytes {out['bytes_']:.3e} "
+              f"coll {out['coll']:.3e} ({len(pts)} pts x "
+              f"{1 + len(knobs)} chunk variants)")
+    return {"hlo_flops": out["flops"], "hlo_bytes": out["bytes_"],
+            "collective_bytes": out["coll"]}

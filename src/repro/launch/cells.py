@@ -1,0 +1,361 @@
+"""Cell builder: (arch x shape x mesh) -> a lowerable step.
+
+For each assigned cell this module produces:
+  * the step function (train_step for train shapes; cached prefill for
+    prefill shapes; single-token serve_step for decode shapes),
+  * ShapeDtypeStruct stand-ins for every argument (params via eval_shape —
+    zero allocation),
+  * in/out shardings resolved from the logical annotations.
+
+Per-arch RUN_HINTS encode how the cell fits the production mesh: FSDP for
+>=2B params, microbatch accumulation for the 1M-token train shape, bf16
+params+optimizer state for the 671B model (2+2+2 bytes/param = 4TB on 512
+chips), adafactor fallbacks, remat always on for train.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, RunConfig, Shape
+from repro.configs.registry import get_config
+from repro.models.registry import ModelFns, get_model
+from repro.nn.module import (eval_shape_params, logical_to_mesh,
+                             resolve_pspec, set_activation_rules)
+from repro.optim.optimizer import make_optimizer
+from repro.train.trainer import lm_loss_fn, make_train_step
+from .mesh import batch_axes, sharding_rules
+
+# how each arch runs at scale (param count driven)
+RUN_HINTS: Dict[str, Dict[str, Any]] = {
+    "moonshot-v1-16b-a3b": dict(fsdp=True, accum_steps=8),
+    "deepseek-v3-671b": dict(fsdp=True, accum_steps=32,
+                             param_dtype="bfloat16",
+                             optimizer="adafactor",
+                             opt_state_dtype="bfloat16"),
+    "qwen3-0.6b": dict(fsdp=False, accum_steps=4),
+    "llama3-8b": dict(fsdp=True, accum_steps=8),
+    "granite-8b": dict(fsdp=True, accum_steps=8),
+    "olmo-1b": dict(fsdp=False, accum_steps=4),
+    "xlstm-1.3b": dict(fsdp=False, accum_steps=8),
+    "llava-next-mistral-7b": dict(fsdp=True, accum_steps=8),
+    "whisper-small": dict(fsdp=False, accum_steps=2),
+    "zamba2-2.7b": dict(fsdp=True, accum_steps=8),
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: Shape
+    cfg: ModelConfig
+    mesh: Mesh
+    step_fn: Callable            # positional args matching arg_structs
+    arg_structs: Tuple           # ShapeDtypeStructs (no allocation)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    kind: str                    # train | prefill | decode
+
+    rules: Any = None
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        set_activation_rules(self.rules, mesh=self.mesh)
+        try:
+            with self.mesh:
+                return jitted.lower(*self.arg_structs)
+        finally:
+            set_activation_rules(None)
+
+
+# ---------------------------------------------------------------------------
+# input stand-ins
+# ---------------------------------------------------------------------------
+
+def batch_structs(cfg: ModelConfig, shape: Shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training batch stand-ins (tokens + optional frontend stub)."""
+    b, t = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "llava":
+        text = t - cfg.n_frontend_tokens
+        out["tokens"] = jax.ShapeDtypeStruct((b, text + 1), jnp.int32)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.frontend_dim or cfg.d_model),
+            jnp.float32)
+    elif cfg.family == "whisper":
+        out["tokens"] = jax.ShapeDtypeStruct((b, t + 1), jnp.int32)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, t + 1), jnp.int32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh) -> Dict[str, NamedSharding]:
+    b = batch_axes(mesh)
+    sh = {"tokens": NamedSharding(mesh, P(b))}
+    if cfg.family in ("llava", "whisper"):
+        sh["frontend"] = NamedSharding(mesh, P(b))
+    return sh
+
+
+def _dim_axis_ok(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def cache_shardings(cache_struct, cfg: ModelConfig, mesh: Mesh):
+    """Decode-cache sharding: batch dim over (pod,data) when divisible;
+    the KV *time* dim over 'model' (sequence-parallel decode attention —
+    how a 550GB 32k x 128 KV cache fits 16GB chips)."""
+    b = batch_axes(mesh)
+
+    def leaf_spec(path_leaf, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # heuristics by rank/name: all caches are stacked (L, B, ...) except
+        # whisper enc_out (B, F, D) and top-level len (L, B)
+        name = path_leaf[-1] if path_leaf else ""
+        if name == "enc_out":
+            if _dim_axis_ok(shape[0], mesh, b):
+                spec[0] = b
+            return P(*spec)
+        if len(shape) >= 2:
+            if _dim_axis_ok(shape[1], mesh, b):
+                spec[1] = b
+        if name in ("k", "v", "ckv", "krope", "k_scale", "v_scale") \
+                and len(shape) >= 3:
+            if _dim_axis_ok(shape[2], mesh, "model"):
+                spec[2] = "model"
+        if name in ("ssd",) and len(shape) >= 3:
+            if _dim_axis_ok(shape[2], mesh, "model"):
+                spec[2] = "model"
+        return P(*spec)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, path + (str(i),))
+                              for i, v in enumerate(tree))
+        return NamedSharding(mesh, leaf_spec(path, tree))
+
+    return walk(cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def make_run_config(arch: str, shape: Shape, *, accum: Optional[int] = None,
+                    run_overrides: Optional[Dict[str, Any]] = None
+                    ) -> RunConfig:
+    hints = dict(RUN_HINTS.get(arch, {}))
+    if run_overrides:
+        hints.update(run_overrides)
+    return RunConfig(
+        fsdp=hints.get("fsdp", False),
+        accum_steps=(accum if accum is not None
+                     else (hints.get("accum_steps", 1)
+                           if shape.kind == "train" else 1)),
+        accum_unroll=hints.get("accum_unroll", False),
+        optimizer=hints.get("optimizer", "adamw"),
+        opt_state_dtype=hints.get("opt_state_dtype", "float32"),
+    )
+
+
+def apply_hints(cfg: ModelConfig, arch: str) -> ModelConfig:
+    hints = RUN_HINTS.get(arch, {})
+    kw = {}
+    if "param_dtype" in hints:
+        kw["param_dtype"] = hints["param_dtype"]
+    return cfg.replace(**kw) if kw else cfg
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               reduced: bool = False, cim=None,
+               accum: Optional[int] = None,
+               overrides: Optional[Dict[str, Any]] = None,
+               run_overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, reduced=reduced, cim=cim)
+    cfg = apply_hints(cfg, arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    run = make_run_config(arch, shape, accum=accum,
+                          run_overrides=run_overrides)
+    zero1 = bool((run_overrides or {}).get(
+        "zero1", RUN_HINTS.get(arch, {}).get("zero1", False)))
+    model = get_model(cfg)
+    rules = sharding_rules(mesh, fsdp=run.fsdp)
+
+    specs = model.specs(cfg)
+    params_struct = eval_shape_params(specs)
+    pspecs = logical_to_mesh(specs, rules)
+    params_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    # drop mesh axes on dims they don't divide (odd vocabs, 4d/3 FFNs, ...)
+    params_sh = jax.tree.map(
+        lambda sh, st: _truncate_sharding(sh, st, mesh), params_sh,
+        params_struct)
+
+    if shape.kind == "train":
+        init_state, train_step = make_train_step(model, cfg, run)
+        opt_struct = jax.eval_shape(init_state, params_struct)
+        opt_sh = _opt_shardings(opt_struct, params_sh, mesh)
+        if zero1:
+            # ZeRO-1: optimizer states sharded over the batch axes even
+            # though params are replicated there — one param all-gather
+            # per step instead of FSDP's per-microbatch weight gathers
+            opt_sh = _zero1_shardings(opt_sh, opt_struct, mesh)
+        bstructs = batch_structs(cfg, shape)
+        bsh = batch_shardings(cfg, mesh)
+        metrics_sh = NamedSharding(mesh, P())
+        return Cell(
+            arch=arch, shape=shape, cfg=cfg, mesh=mesh, kind="train",
+            rules=rules,
+            step_fn=train_step,
+            arg_structs=(params_struct, opt_struct, bstructs),
+            in_shardings=(params_sh, opt_sh, bsh),
+            out_shardings=(params_sh, opt_sh,
+                           jax.tree.map(lambda _: metrics_sh,
+                                        {"loss": 0, "grad_norm": 0, "lr": 0,
+                                         "step": 0})),
+            donate=(0, 1),
+        )
+
+    # inference shapes
+    b = shape.global_batch
+    if shape.kind == "prefill":
+        tok_len = shape.seq_len
+        cache_len = shape.seq_len
+    else:                                    # decode: one token, full cache
+        tok_len = 1
+        cache_len = shape.seq_len
+        # single-query attention needs no KV chunking; full attention over
+        # the time-sharded cache lowers to a clean partial-softmax + psum
+        # (the chunk-scan reshape would break the model-axis time sharding)
+        cfg = cfg.replace(attn_chunk=0)
+    cache_struct = jax.eval_shape(
+        partial(model.init_cache, cfg, b, cache_len))
+    cache_sh = cache_shardings(cache_struct, cfg, mesh)
+    tok_struct = jax.ShapeDtypeStruct((b, tok_len), jnp.int32)
+    bspec = batch_axes(mesh) if _dim_axis_ok(b, mesh, batch_axes(mesh)) \
+        else None
+    tok_sh = NamedSharding(mesh, P(bspec))
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(params, cache, tokens, cfg)
+        return logits, new_cache
+
+    vspec = "model" if _dim_axis_ok(cfg.vocab, mesh, "model") else None
+    logits_sh = NamedSharding(mesh, P(bspec, None, vspec))
+    return Cell(
+        arch=arch, shape=shape, cfg=cfg, mesh=mesh, kind=shape.kind,
+        rules=rules,
+        step_fn=serve_step,
+        arg_structs=(params_struct, cache_struct, tok_struct),
+        in_shardings=(params_sh, cache_sh, tok_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate=(1,),
+    )
+
+
+def _opt_shardings(opt_struct, params_sh, mesh):
+    """Optimizer state mirrors the parameter shardings (m/v/mom follow
+    their parameter; adafactor vr/vc follow with the reduced dim dropped;
+    scalars replicated)."""
+    flat_p = dict(_flatten_tree(params_sh))
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        sub = path[1:]                     # drop the state kind (m/v/mom/..)
+        if not sub:                        # e.g. "step"
+            return NamedSharding(mesh, P())
+        key = "/".join(sub)
+        if key in flat_p:
+            return _truncate_sharding(flat_p[key], tree, mesh)
+        name = sub[-1]
+        pkey = "/".join(sub[:-1])
+        if name in ("vr", "vc", "v") and pkey in flat_p:
+            psh = flat_p[pkey]
+            spec = list(psh.spec)
+            spec += [None] * (len(tree.shape) + 2 - len(spec))
+            if name == "vr":               # param reduced over last dim
+                spec = spec[:len(tree.shape)]
+            elif name == "vc":             # param reduced over dim -2
+                spec = spec[:len(tree.shape) - 1] + [spec[len(tree.shape)]]
+            else:
+                spec = spec[:len(tree.shape)]
+            return _truncate_sharding(NamedSharding(mesh, P(*spec)), tree, mesh)
+        return NamedSharding(mesh, P())
+
+    return walk(opt_struct)
+
+
+def _truncate_sharding(psh: NamedSharding, leaf, mesh) -> NamedSharding:
+    """Fit a parameter's PartitionSpec onto a (possibly lower-rank or
+    reshaped) optimizer-state leaf; drop axes that no longer divide."""
+    spec = list(psh.spec) + [None] * 8
+    nd = len(leaf.shape)
+    out = []
+    for i in range(nd):
+        ax = spec[i] if i < len(psh.spec) else None
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(ax if leaf.shape[i] % n == 0 and leaf.shape[i] >= n else None)
+    return NamedSharding(mesh, P(*out))
+
+
+def _zero1_shardings(opt_sh, opt_struct, mesh):
+    """Add batch-axis sharding to optimizer-state leaves on the first
+    divisible, currently-unsharded dim (ZeRO-1)."""
+    b = batch_axes(mesh)
+    nb = 1
+    for a in b:
+        nb *= mesh.shape[a]
+
+    def walk(sh, st):
+        if isinstance(sh, dict):
+            return {k2: walk(sh[k2], st[k2]) for k2 in sh}
+        if not st.shape:                      # scalars (step) stay replicated
+            return sh
+        spec = list(sh.spec) + [None] * (len(st.shape) - len(sh.spec))
+        used = {a for s in spec if s is not None
+                for a in ((s,) if isinstance(s, str) else s)}
+        if any(a in used for a in b):
+            return sh                          # already sharded over batch
+        for i, dim in enumerate(st.shape):
+            if spec[i] is None and dim % nb == 0 and dim >= nb:
+                spec[i] = b if len(b) > 1 else b[0]
+                return NamedSharding(mesh, P(*spec))
+        return sh
+
+    return walk(opt_sh, opt_struct)
+
+
+def _flatten_tree(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten_tree(v, path + (k,))
+    else:
+        yield "/".join(path), tree

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import: jax locks the device count on first
+# init. The dry-run (and only the dry-run) builds 512 placeholder host
+# devices so jax.make_mesh can assemble the production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+single-pod (16,16) and multi-pod (2,16,16) production meshes, print
+memory_analysis / cost_analysis, and extract the three roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+Roofline terms (TPU v5e targets):
+  compute    = HLO_FLOPs / (chips * 197e12 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s)
+  collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+collective_bytes is parsed from the compiled HLO (operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-
+permute); cost_analysis provides FLOPs and HBM bytes.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+PEAK_FLOPS = 197e12            # bf16 / chip
+HBM_BW = 819e9                 # B/s / chip
+ICI_BW = 50e9                  # B/s / link
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-byte accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["n_ops"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "x = f32[...] all-gather(...)" — op name after the result shape
+        m = re.match(r"[%\w.\-]+\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if opname.startswith(kind):
+                out[kind] += _shape_bytes(shape_str)
+                out["n_ops"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs estimates (6*N_active*D) for the usefulness ratio
+# ---------------------------------------------------------------------------
+
+def param_counts(cell) -> Dict[str, int]:
+    import numpy as np
+    from repro.models.registry import get_model
+    from repro.nn.module import eval_shape_params
+    model = get_model(cell.cfg)
+    struct = eval_shape_params(model.specs(cell.cfg))
+    leaves = {"/".join(map(str, p)): l for p, l in _walk(struct)}
+    total = sum(int(np.prod(l.shape)) for l in leaves.values())
+    # active params for MoE: routed experts contribute top_k/n_experts
+    active = 0
+    moe = cell.cfg.moe
+    for path, l in leaves.items():
+        n = int(np.prod(l.shape))
+        is_expert = (moe is not None and "/moe/" in "/" + path + "/"
+                     and path.rsplit("/", 1)[-1] in ("wg", "wu", "wd")
+                     and len(l.shape) >= 3 and l.shape[-3] == moe.n_experts)
+        if is_expert:
+            active += n * moe.top_k // moe.n_experts
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def _walk(tree, path=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], path + (k,))
+    else:
+        yield path, tree
+
+
+def model_flops(cell) -> float:
+    """6 * N_active * tokens (train) / 2 * N_active * tokens (inference)."""
+    pc = param_counts(cell)
+    n = pc["active"]
+    sh = cell.shape
+    if cell.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n * tokens
+    tokens = sh.global_batch * 1
+    return 2.0 * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             cim: Optional[str] = None, verbose: bool = True,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    from repro.configs.registry import cell_status
+    from repro.core.cim_linear import CIMConfig
+    from repro.core.granularity import Granularity
+    from .cells import build_cell
+    from .mesh import make_production_mesh
+
+    ok, why = cell_status(arch, shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "cim": cim or "off"}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name}: SKIP ({why})")
+        return rec
+
+    cim_cfg = None
+    if cim and cim != "off":
+        cim_cfg = CIMConfig(
+            enabled=True, mode=cim, weight_bits=4, cell_bits=2, act_bits=8,
+            psum_bits=6, array_rows=256, array_cols=256,
+            weight_granularity=Granularity.COLUMN,
+            psum_granularity=Granularity.COLUMN, use_kernel=False)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, cim=cim_cfg,
+                      overrides=overrides)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    # cost_analysis flops on the host backend are per-program (global HLO
+    # was partitioned): treat as per-device and scale to global.
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    mf = model_flops(cell)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": (coll["total"]) / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_accessed,
+            "collective_bytes": coll["total"],
+            "collective_ops": coll["n_ops"],
+            "bytes_per_device_argument": int(mem.argument_size_in_bytes),
+            "bytes_per_device_output": int(mem.output_size_in_bytes),
+            "bytes_per_device_temp": int(mem.temp_size_in_bytes),
+            "bytes_per_device_alias": int(mem.alias_size_in_bytes),
+            # donated args alias their outputs; peak = args + temp + net out
+            "bytes_per_device_peak": int(
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + max(0, mem.output_size_in_bytes - mem.alias_size_in_bytes)),
+        },
+        "collectives": {k: coll[k] for k in _COLLECTIVES},
+        "roofline": {
+            **{k: v for k, v in terms.items()},
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "useful_ratio": (mf / chips) / max(flops, 1.0),
+        },
+    })
+    if verbose:
+        pd = rec["per_device"]
+        print(f"[dryrun] {arch} x {shape_name} ({'2x16x16' if multi_pod else '16x16'}"
+              f", cim={cim or 'off'}): OK  kind={cell.kind}")
+        print(f"  lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"per-dev FLOPs {pd['hlo_flops']:.3e} bytes {pd['hlo_bytes']:.3e} "
+              f"coll {pd['collective_bytes']:.3e} ({pd['collective_ops']} ops)")
+        print(f"  HBM/device: args {pd['bytes_per_device_argument']/1e9:.2f}GB "
+              f"out {pd['bytes_per_device_output']/1e9:.2f}GB "
+              f"temp {pd['bytes_per_device_temp']/1e9:.2f}GB "
+              f"peak {pd['bytes_per_device_peak']/1e9:.2f}GB")
+        r = rec["roofline"]
+        print(f"  roofline: compute {r['compute_s']:.3e}s memory "
+              f"{r['memory_s']:.3e}s collective {r['collective_s']:.3e}s "
+              f"-> dominant={r['dominant']} useful={r['useful_ratio']:.2f}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cim", default="off", choices=["off", "emulate", "deploy"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        cim=args.cim))
+            except Exception as e:
+                failures += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "multi_pod": mp, "status": "error",
+                                "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} records to {args.out}")
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    print(f"[dryrun] ok={n_ok} skipped={n_skip} failed={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Roofline ledger: for every (arch x shape) cell,
+  1. production dry-run on the (16,16) pod mesh  -> memory fit + schedule,
+  2. production dry-run on the (2,16,16) multi-pod mesh -> compile proof,
+  3. loop-corrected accounting (launch/account.py) -> exact flops / bytes /
+     collective bytes per device,
+and derive the three roofline terms. Incremental JSON (resumable):
+
+  PYTHONPATH=src python -m repro.launch.ledger --out results/ledger.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except Exception:
+        return {}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/ledger.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated arch filter")
+    ap.add_argument("--skip-multipod", action="store_true")
+    ap.add_argument("--skip-account", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import ARCHS, cell_status
+    from repro.launch.account import account_cell
+    from repro.launch.dryrun import model_flops, run_cell
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    ledger = load(args.out)
+    archs = list(ARCHS)
+    if args.only:
+        archs = [a for a in archs if a in args.only.split(",")]
+
+    mesh1 = make_production_mesh(multi_pod=False)
+
+    for arch in archs:
+        for shape in SHAPES:
+            key = f"{arch}|{shape}"
+            if key in ledger and ledger[key].get("status") in ("ok", "skipped"):
+                continue
+            ok, why = cell_status(arch, shape)
+            if not ok:
+                ledger[key] = {"status": "skipped", "reason": why}
+                _save(args.out, ledger)
+                print(f"[ledger] {key}: SKIP ({why})", flush=True)
+                continue
+            rec = {"status": "ok"}
+            t0 = time.time()
+            try:
+                prod = run_cell(arch, shape, multi_pod=False, verbose=False)
+                rec["production"] = {k: prod[k] for k in
+                                     ("per_device", "collectives",
+                                      "lower_s", "compile_s", "kind",
+                                      "chips")}
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"status": "error", "stage": "production",
+                       "error": f"{type(e).__name__}: {e}"}
+                ledger[key] = rec
+                _save(args.out, ledger)
+                continue
+            if not args.skip_multipod:
+                try:
+                    t1 = time.time()
+                    mp = run_cell(arch, shape, multi_pod=True, verbose=False)
+                    rec["multipod"] = {
+                        "compile_s": mp["compile_s"],
+                        "peak_gb": mp["per_device"][
+                            "bytes_per_device_peak"] / 1e9,
+                        "collective_bytes": mp["per_device"][
+                            "collective_bytes"],
+                    }
+                except Exception as e:
+                    traceback.print_exc()
+                    rec["multipod"] = {"status": "error",
+                                       "error": f"{type(e).__name__}: {e}"}
+            if not args.skip_account:
+                try:
+                    acct = account_cell(arch, shape, mesh1, verbose=False)
+                    rec["account"] = acct
+                except Exception as e:
+                    traceback.print_exc()
+                    rec["account"] = {"status": "error",
+                                      "error": f"{type(e).__name__}: {e}"}
+
+            # roofline terms from the corrected accounting (fallback:
+            # production aggregates, which undercount loop bodies)
+            src = rec.get("account") if "hlo_flops" in rec.get("account", {}) \
+                else rec["production"]["per_device"]
+            cell = build_cell(arch, shape, mesh1)
+            mf = model_flops(cell)
+            chips = 256
+            terms = {
+                "compute_s": src["hlo_flops"] / PEAK_FLOPS,
+                "memory_s": src["hlo_bytes"] / HBM_BW,
+                "collective_s": src["collective_bytes"] / ICI_BW,
+            }
+            dom = max(terms, key=terms.get)
+            rec["roofline"] = {
+                **terms,
+                "dominant": dom,
+                "model_flops_global": mf,
+                "useful_ratio": (mf / chips) / max(src["hlo_flops"], 1.0),
+                "peak_hbm_gb": rec["production"]["per_device"][
+                    "bytes_per_device_peak"] / 1e9,
+                "fits_16gb": rec["production"]["per_device"][
+                    "bytes_per_device_peak"] / 1e9 <= 16.0,
+                "source": ("account" if src is rec.get("account")
+                           else "production"),
+            }
+            rec["wall_s"] = round(time.time() - t0, 1)
+            ledger[key] = rec
+            _save(args.out, ledger)
+            r = rec["roofline"]
+            print(f"[ledger] {key}: c={r['compute_s']:.2e}s "
+                  f"m={r['memory_s']:.2e}s x={r['collective_s']:.2e}s "
+                  f"dom={r['dominant'][:-2]} useful={r['useful_ratio']:.2f} "
+                  f"hbm={r['peak_hbm_gb']:.1f}GB ({rec['wall_s']}s)",
+                  flush=True)
+
+    n_ok = sum(1 for v in ledger.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in ledger.values() if v.get("status") == "skipped")
+    n_err = sum(1 for v in ledger.values() if v.get("status") == "error")
+    print(f"[ledger] done: ok={n_ok} skipped={n_skip} error={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+def _save(path, ledger):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(ledger, f, indent=1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Production meshes and logical->mesh sharding rules.
+
+Meshes are built by FUNCTIONS so importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — "pod"
+composes with "data" for batch/FSDP sharding; "model" stays intra-pod
+(TP/EP collectives ride the fast ICI, DP gradient reduction crosses DCN).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """All local devices on one 'data' axis (tests / CPU runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sharding_rules(mesh: Mesh, *, fsdp: bool = False) -> Dict[str, object]:
+    """Logical-axis rules consumed by nn.module.resolve_pspec.
+
+    TP over 'model' (heads/mlp/vocab/experts); FSDP additionally shards
+    the embed (d_model) axis of weights over the batch axes — XLA SPMD
+    inserts the all-gathers (weights) / reduce-scatters (grads)."""
+    b = batch_axes(mesh)
+    rules: Dict[str, object] = {
+        "batch": b,
+        "vocab": "model" if "model" in mesh.axis_names else None,
+        "heads": "model" if "model" in mesh.axis_names else None,
+        "mlp": "model" if "model" in mesh.axis_names else None,
+        "experts": "model" if "model" in mesh.axis_names else None,
+        "embed": b if fsdp else None,
+    }
+    return rules

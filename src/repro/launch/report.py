@@ -1,0 +1,110 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from ledger JSON.
+
+  PYTHONPATH=src python -m repro.launch.report results/ledger.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_b(x):
+    if x >= 1e12:
+        return f"{x/1e12:.2f}T"
+    if x >= 1e9:
+        return f"{x/1e9:.2f}G"
+    if x >= 1e6:
+        return f"{x/1e6:.2f}M"
+    return f"{x:.0f}"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def roofline_table(ledger) -> str:
+    rows = ["| arch | shape | kind | compute | memory | collective | "
+            "dominant | useful | HBM/dev | fits 16GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(ledger):
+        rec = ledger[key]
+        arch, shape = key.split("|")
+        if rec.get("status") == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                        f"skip: {rec['reason'].split(':')[-1].strip()} |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | — | ERROR | | | | | | |")
+            continue
+        r = rec["roofline"]
+        dom = r["dominant"].replace("_s", "")
+        rows.append(
+            f"| {arch} | {shape} | {rec['production']['kind']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{dom}** | "
+            f"{r['useful_ratio']:.2f} | {r['peak_hbm_gb']:.1f}GB | "
+            f"{'yes' if r['fits_16gb'] else 'no'} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(ledger) -> str:
+    rows = ["| arch | shape | pod compile | multipod compile | coll ops | "
+            "AG | AR | RS | A2A | CP |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(ledger):
+        rec = ledger[key]
+        arch, shape = key.split("|")
+        if rec.get("status") != "ok":
+            continue
+        p = rec["production"]
+        c = rec.get("production", {}).get("collectives", {})
+        mp = rec.get("multipod", {})
+        mp_s = (f"{mp.get('compile_s', '—')}s"
+                if "compile_s" in mp else "ERR")
+        rows.append(
+            f"| {arch} | {shape} | {p['compile_s']}s | {mp_s} | "
+            f"{p['per_device']['collective_ops']} | "
+            f"{fmt_b(c.get('all-gather', 0))} | "
+            f"{fmt_b(c.get('all-reduce', 0))} | "
+            f"{fmt_b(c.get('reduce-scatter', 0))} | "
+            f"{fmt_b(c.get('all-to-all', 0))} | "
+            f"{fmt_b(c.get('collective-permute', 0))} |")
+    return "\n".join(rows)
+
+
+def perf_table(perf) -> str:
+    rows = ["| variant | compute | memory | collective | dominant | "
+            "HBM/dev | useful |",
+            "|---|---|---|---|---|---|---|"]
+    for rec in perf:
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['label']} | ERROR: {rec.get('error','')[:60]} | | | | | |")
+            continue
+        r = rec["roofline"]
+        rows.append(
+            f"| {rec['label']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{rec['peak_hbm_gb']:.1f}GB | {rec['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/ledger.json"
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):
+        print(perf_table(data))
+        return
+    print("## Roofline\n")
+    print(roofline_table(data))
+    print("\n## Dry-run collectives\n")
+    print(dryrun_table(data))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --reduced --steps 100 --batch 8 --seq 128 --cim emulate
+
+Runs on whatever devices exist (single CPU here; the production mesh via
+--mesh pod|multipod on a real fleet). Wires the fault-tolerant loop:
+auto-resume from the newest checkpoint, async saves, straggler monitor.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--cim", default="off",
+                    choices=["off", "emulate", "deploy"])
+    ap.add_argument("--cim-bits", type=int, default=4)
+    ap.add_argument("--cim-cell-bits", type=int, default=2)
+    ap.add_argument("--cim-psum-bits", type=int, default=6)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a failure at this step (FT testing)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import RunConfig
+    from repro.configs.registry import get_config
+    from repro.core.cim_linear import CIMConfig
+    from repro.data.pipeline import make_lm_pipeline
+    from repro.models.registry import get_model
+    from repro.nn.module import init_params
+    from repro.runtime.fault_tolerance import FaultTolerantLoop, TrainLoopState
+    from repro.train.trainer import make_train_step
+
+    cim = None
+    if args.cim != "off":
+        cim = CIMConfig(enabled=True, mode=args.cim,
+                        weight_bits=args.cim_bits,
+                        cell_bits=args.cim_cell_bits,
+                        psum_bits=args.cim_psum_bits,
+                        array_rows=128, array_cols=128)
+    cfg = get_config(args.arch, reduced=args.reduced, cim=cim)
+    run = RunConfig(lr=args.lr, total_steps=args.steps,
+                    warmup_steps=max(1, args.steps // 10),
+                    accum_steps=args.accum, optimizer=args.optimizer,
+                    checkpoint_dir=args.ckpt_dir,
+                    checkpoint_every=args.ckpt_every, seed=args.seed)
+    model = get_model(cfg)
+
+    def make_batches():
+        pipe = make_lm_pipeline(vocab=cfg.vocab, seq_len=args.seq,
+                                global_batch=args.batch, seed=args.seed)
+        for raw in pipe:
+            batch = {"tokens": jnp.asarray(raw["tokens"])}
+            if cfg.family in ("llava", "whisper"):
+                fd = cfg.frontend_dim or cfg.d_model
+                batch["frontend"] = jnp.zeros(
+                    (args.batch, cfg.n_frontend_tokens, fd), jnp.float32)
+            yield batch
+
+    init_state_fn, train_step = make_train_step(model, cfg, run)
+    train_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def fresh():
+        params = init_params(model.specs(cfg), jax.random.PRNGKey(args.seed))
+        return TrainLoopState(params=params, opt_state=init_state_fn(params),
+                              step=0)
+
+    loop = FaultTolerantLoop(args.ckpt_dir,
+                             checkpoint_every=args.ckpt_every)
+    state = loop.resume_or_init(fresh)
+    if state.step:
+        print(f"[train] resumed from step {state.step}")
+
+    t0 = time.time()
+    tokens_per_step = args.batch * args.seq
+
+    def on_metrics(step, m):
+        dt = time.time() - t0
+        print(f"[train] step {step:5d} loss {float(m['loss']):.4f} "
+              f"gnorm {float(m['grad_norm']):.3f} lr {float(m['lr']):.2e} "
+              f"({step * tokens_per_step / max(dt, 1e-9):.0f} tok/s)")
+
+    state = loop.run(state, train_step, make_batches(),
+                     total_steps=args.steps, crash_at_step=args.crash_at,
+                     log_every=args.log_every, on_metrics=on_metrics)
+    print(f"[train] done at step {state.step} "
+          f"({time.time() - t0:.1f}s, straggler warns="
+          f"{loop.straggler.n_warn})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,55 @@
+"""LLaVA-NeXT-style VLM: Mistral-7B text backbone with a patch-embedding
+STUB frontend per the assignment — ``input_specs`` supplies precomputed
+anyres patch embeddings (B, n_patches, frontend_dim); a 2-layer MLP
+projector maps them into the LM embedding space and they are prepended to
+the token embeddings. Loss masking of image positions is handled by the
+trainer (labels = -100 on image slots).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import apply_linear, linear_specs
+from repro.nn.module import ParamSpec
+from . import transformer
+from .layers import cdt, pdt
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    sp = transformer.specs(cfg)
+    fd = cfg.frontend_dim or cfg.d_model
+    sp["projector"] = {
+        "fc1": linear_specs(fd, cfg.d_model, in_axis=None, out_axis="embed",
+                            dtype=pdt(cfg)),
+        "fc2": linear_specs(cfg.d_model, cfg.d_model, in_axis="embed",
+                            out_axis="embed", dtype=pdt(cfg)),
+    }
+    return sp
+
+
+def project_patches(params: Dict, patches: jnp.ndarray, cfg: ModelConfig):
+    h = apply_linear(params["projector"]["fc1"], patches, None,
+                     compute_dtype=cdt(cfg))
+    h = jnp.where(h > 0, h, 0.0)  # relu? llava uses gelu
+    return apply_linear(params["projector"]["fc2"], h, None,
+                        compute_dtype=cdt(cfg))
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    img = None
+    if extra_embeds is not None:
+        img = project_patches(params, extra_embeds, cfg)
+    return transformer.forward(params, tokens, cfg, extra_embeds=img)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    return transformer.decode_step(params, cache, tokens, cfg)

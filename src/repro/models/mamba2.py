@@ -1,0 +1,208 @@
+"""Mamba2 (SSD) blocks in JAX — chunked state-space-dual algorithm for
+train/prefill (matmul-friendly, O(L) memory in chunks) and an O(1)-state
+recurrent decode step. Used standalone and inside the zamba2 hybrid.
+
+The SSD state update itself is an activation-activation op (no stored
+weight) so it is not CIM-mapped (DESIGN.md §5); the in/out projections are
+CIM-quantized linears like every other stored-weight matmul.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import apply_linear, linear_specs
+from repro.nn.module import ParamSpec
+from .layers import apply_norm, cdt, norm_specs, pdt
+
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    n_groups = 1
+    conv_dim = d_inner + 2 * n_groups * s.d_state
+    return d_inner, n_heads, n_groups, conv_dim
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    d_inner, nh, ng, conv_dim = mamba_dims(cfg)
+    dt = pdt(cfg)
+    in_dim = 2 * d_inner + 2 * ng * s.d_state + nh
+    return {
+        "ln": norm_specs(cfg),
+        "in_proj": linear_specs(cfg.d_model, in_dim, cim=cfg.cim,
+                                in_axis="embed", out_axis="mlp", dtype=dt),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), dt, "fan_in:1.0",
+                            (None, "mlp")),
+        "conv_b": ParamSpec((conv_dim,), jnp.float32, "zeros", ("mlp",)),
+        "A_log": ParamSpec((nh,), jnp.float32,
+                           lambda k, sh, d: jnp.log(jax.random.uniform(
+                               k, sh, jnp.float32, 1.0, 16.0)), (None,)),
+        "D": ParamSpec((nh,), jnp.float32, "ones", (None,)),
+        "dt_bias": ParamSpec((nh,), jnp.float32,
+                             lambda k, sh, d: jnp.log(jnp.exp(jax.random.uniform(
+                                 k, sh, jnp.float32, 1e-3, 0.1)) - 1.0 + 1e-9),
+                             (None,)),
+        "out_norm": {"scale": ParamSpec((d_inner,), jnp.float32, "ones", ("mlp",))},
+        "out_proj": linear_specs(d_inner, cfg.d_model, cim=cfg.cim,
+                                 in_axis="mlp", out_axis="embed", dtype=dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x: (B, L, C), w: (K, C). Returns (y, new
+    state) where state is the last K-1 inputs for streaming decode."""
+    k = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)             # (B, K-1+L, C)
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xin[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    y = y + b[None, None, :].astype(y.dtype)
+    new_state = xin[:, -(k - 1):, :] if k > 1 else xin[:, :0, :]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum_decay(da_cs: jnp.ndarray) -> jnp.ndarray:
+    """da_cs: (..., Q, H) within-chunk inclusive cumsum of dt*A.
+    Returns lower-triangular decay matrix L: (..., H, Q, Q),
+    L[i,j] = exp(cs_i - cs_j) for i >= j."""
+    cs = jnp.swapaxes(da_cs, -1, -2)                          # (..., H, Q)
+    diff = cs[..., :, None] - cs[..., None, :]                # (..., H, Q, Q)
+    q = cs.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None):
+    """Chunked SSD scan (Mamba2 alg. 1).
+
+    x: (b, L, H, P); dt: (b, L, H); A: (H,); B, C: (b, L, G, N); D: (H,)
+    initial_state: optional (b, H, N, P) carried state (stateful prefill).
+    Returns y: (b, L, H, P) and the final state (b, H, N, P).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)                           # (b, L, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = Bh.reshape(b, nc, chunk, H, N)
+    Cc = Ch.reshape(b, nc, chunk, H, N)
+
+    xdt = xc * dtc[..., None]                                 # fold dt into x
+    da = dtc * A[None, None, None, :]                         # (b,nc,Q,H) <= 0
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (diagonal blocks)
+    Ldec = _segsum_decay(da_cs)                               # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc) * Ldec
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xdt)
+
+    # chunk-final states
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)       # (b,nc,Q,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp", Bc, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                 # (b,nc,H)
+
+    def body(S, inp):
+        st, dec = inp                                         # (b,H,N,P),(b,H)
+        S_new = S * dec[..., None, None] + st
+        return S_new, S                                       # emit state BEFORE chunk
+
+    S0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, H, N, P), jnp.float32))
+    S_final, prev_states = jax.lax.scan(
+        body, S0, (states.swapaxes(0, 1).astype(jnp.float32),
+                   chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                  # (b,nc,H,N,P)
+
+    state_decay_in = jnp.exp(da_cs)                           # (b,nc,Q,H)
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp", Cc,
+                       prev_states.astype(Cc.dtype), state_decay_in)
+
+    y = (y_diag + y_off).reshape(b, Lp, H, P)[:, :L]
+    y = y + x[:, :L] * D[None, None, :, None]
+    return y, S_final
+
+
+def apply_mamba2(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """One Mamba2 block. state = {"conv": (B,K-1,convdim), "ssd": (B,H,N,P)}
+    for streaming decode; None for train/prefill."""
+    s = cfg.ssm
+    d_inner, nh, ng, conv_dim = mamba_dims(cfg)
+    bsz, L, _ = x.shape
+
+    h = apply_norm(p["ln"], x, cfg)
+    zxbcdt = apply_linear(p["in_proj"], h, cfg.cim, compute_dtype=cdt(cfg))
+    z, xbc, dt_pre = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+        p["conv_b"], conv_state)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + ng * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,) < 0
+    xh = xs.reshape(bsz, L, nh, s.head_dim)
+    Bm = B.reshape(bsz, L, ng, s.d_state)
+    Cm = C.reshape(bsz, L, ng, s.d_state)
+
+    if state is None:
+        y, S = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], s.chunk)
+        new_state = None
+    elif L > 1:
+        # stateful prefill: chunked scan from the carried state
+        y, S = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], s.chunk,
+                           initial_state=state["ssd"])
+        new_state = {"conv": new_conv, "ssd": S}
+    else:
+        # single-step recurrence (L == 1)
+        S = state["ssd"]                                      # (B,H,N,P)
+        dt1 = dt[:, 0]                                        # (B,H)
+        dec = jnp.exp(dt1 * A[None, :])
+        Bx = jnp.einsum("bn,bhp->bhnp", Bm[:, 0, 0], xh[:, 0] * dt1[..., None])
+        S = S * dec[..., None, None] + Bx
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0, 0], S) \
+            + xh[:, 0] * p["D"][None, :, None]
+        y = y[:, None]                                        # (B,1,H,P)
+        new_state = {"conv": new_conv, "ssd": S}
+
+    y = y.reshape(bsz, L, d_inner)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    yf = yf * p["out_norm"]["scale"]
+    out = apply_linear(p["out_proj"], yf.astype(cdt(cfg)), cfg.cim,
+                       compute_dtype=cdt(cfg))
+    if state is not None:
+        return x + out, new_state
+    return x + out, None
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict:
+    s = cfg.ssm
+    d_inner, nh, ng, conv_dim = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.float32),
+        "ssd": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+    }

@@ -1,0 +1,43 @@
+"""Model registry: family name -> (specs, forward, init_cache, decode_step).
+
+``get_model(cfg)`` resolves the family of a ModelConfig; every entry
+shares the same functional interface so the trainer / server / dry-run
+never special-case architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.configs.base import ModelConfig
+from . import llava, transformer, whisper, xlstm, zamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    specs: Callable
+    forward: Callable            # (params, tokens, cfg, extra_embeds=None) -> logits
+    init_cache: Optional[Callable]   # (cfg, batch, max_len) -> cache
+    decode_step: Optional[Callable]  # (params, cache, tokens, cfg) -> (logits, cache)
+
+
+_FAMILIES: Dict[str, ModelFns] = {
+    "transformer": ModelFns(transformer.specs, transformer.forward,
+                            transformer.init_cache, transformer.decode_step),
+    "xlstm": ModelFns(xlstm.specs, xlstm.forward, xlstm.init_cache,
+                      xlstm.decode_step),
+    "zamba2": ModelFns(zamba2.specs, zamba2.forward, zamba2.init_cache,
+                       zamba2.decode_step),
+    "whisper": ModelFns(whisper.specs, whisper.forward, whisper.init_cache,
+                        whisper.decode_step),
+    "llava": ModelFns(llava.specs, llava.forward, llava.init_cache,
+                      llava.decode_step),
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelFns:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown model family {cfg.family!r}; "
+                       f"known: {sorted(_FAMILIES)}") from None

@@ -1,0 +1,205 @@
+"""Generic decoder-only LM covering the dense GQA family (llama3, granite,
+qwen3 w/ qk-norm, olmo w/ non-parametric LN), MLA (deepseek-v3) and MoE
+(moonshot, deepseek) variants — one spec/apply pair driven by ModelConfig.
+
+Layers run under ``lax.scan`` with stacked parameters (small HLO, fast
+compiles at 61 layers) and optional remat. Decode maintains per-layer KV
+caches (latent caches for MLA) scanned alongside the parameters.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import apply_linear, linear_specs
+from repro.nn.module import ParamSpec, constrain, stack_specs
+from .layers import (apply_mlp, apply_moe, apply_norm, cdt, gqa_attend,
+                     gqa_specs, mla_attend, mla_specs, mlp_specs, moe_specs,
+                     norm_specs, pdt)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig, *, moe: bool, dense_d_ff: int = 0) -> Dict:
+    sp = {
+        "ln1": norm_specs(cfg),
+        "ln2": norm_specs(cfg),
+        "attn": mla_specs(cfg) if cfg.mla is not None else gqa_specs(cfg),
+    }
+    if moe:
+        sp["moe"] = moe_specs(cfg)
+    else:
+        sp["mlp"] = mlp_specs(cfg, d_ff=dense_d_ff or cfg.d_ff)
+    return sp
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    sp: Dict = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), pdt(cfg), "normal:0.02",
+                           ("vocab", "embed")),
+        "ln_f": norm_specs(cfg),
+    }
+    n_moe = 0
+    if cfg.moe is not None:
+        n_dense = cfg.moe.n_dense_layers
+        n_moe = cfg.n_layers - n_dense
+        if n_dense:
+            sp["dense_layers"] = stack_specs(
+                _block_specs(cfg, moe=False,
+                             dense_d_ff=cfg.moe.dense_d_ff or cfg.d_ff),
+                n_dense)
+        sp["moe_layers"] = stack_specs(_block_specs(cfg, moe=True), n_moe)
+    else:
+        sp["layers"] = stack_specs(_block_specs(cfg, moe=False), cfg.n_layers)
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = linear_specs(
+            cfg.d_model, cfg.vocab,
+            cim=cfg.cim if cfg.cim_lm_head else None,
+            in_axis="embed", out_axis="vocab", dtype=pdt(cfg),
+            init="normal:0.02")
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(p: Dict, x, cfg: ModelConfig, positions, cache, moe: bool):
+    h, new_cache = (mla_attend(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                               positions=positions, cache=cache)
+                    if cfg.mla is not None else
+                    gqa_attend(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                               positions=positions, cache=cache))
+    x = x + h
+    z = apply_norm(p["ln2"], x, cfg)
+    x = x + (apply_moe(p["moe"], z, cfg) if moe else apply_mlp(p["mlp"], z, cfg))
+    x = constrain(x, ("batch", None, None))
+    return x, new_cache
+
+
+def _run_stack(layer_params, x, cfg, positions, caches, moe: bool):
+    """Scan (or unrolled loop) over a homogeneous stack of blocks."""
+    blk = partial(_block, cfg=cfg, positions=positions, moe=moe)
+    if cfg.remat:
+        # full recompute per layer: only the scan-carried residual stream is
+        # saved (d_model wide) — the policy that fits 1M-token batches.
+        blk = jax.checkpoint(blk)
+
+    if cfg.scan_layers:
+        def body(carry, inp):
+            p, c = inp
+            y, nc = blk(p, carry, cache=c)
+            return y, nc
+        x, new_caches = jax.lax.scan(body, x, (layer_params, caches))
+        return x, new_caches
+    n = jax.tree_util.tree_leaves(layer_params)[0].shape[0]
+    new_caches = []
+    for i in range(n):
+        p_i = jax.tree.map(lambda a: a[i], layer_params)
+        c_i = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+        x, nc = blk(p_i, x, cache=c_i)
+        new_caches.append(nc)
+    if caches is None:
+        return x, None
+    return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+
+
+def _embed(params, tokens, cfg, extra_embeds):
+    x = params["embed"][tokens].astype(cdt(cfg))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt(cfg)), x], axis=1)
+    return x
+
+
+def _logits(params, x, cfg):
+    x = apply_norm(params["ln_f"], x, cfg)
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt(cfg)))
+    return apply_linear(params["lm_head"], x,
+                        cfg.cim if cfg.cim_lm_head else None,
+                        compute_dtype=cdt(cfg))
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence forward (train / prefill scoring): tokens (B, T) ->
+    logits (B, T', vocab). extra_embeds (B, Tp, D) are prepended (VLM)."""
+    x = _embed(params, tokens, cfg, extra_embeds)
+    positions = jnp.arange(x.shape[1])
+    x = constrain(x, ("batch", None, None))
+    if cfg.moe is not None:
+        if "dense_layers" in params:
+            x, _ = _run_stack(params["dense_layers"], x, cfg, positions, None, False)
+        x, _ = _run_stack(params["moe_layers"], x, cfg, positions, None, True)
+    else:
+        x, _ = _run_stack(params["layers"], x, cfg, positions, None, False)
+    return _logits(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Per-layer decode caches stacked on a leading layer axis."""
+    def kv(n_layers):
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        if cfg.kv_cache_dtype == "int8":
+            return {
+                "k": jnp.zeros((n_layers, batch, max_len, kvh, hd), jnp.int8),
+                "v": jnp.zeros((n_layers, batch, max_len, kvh, hd), jnp.int8),
+                "k_scale": jnp.zeros((n_layers, batch, max_len, kvh),
+                                     jnp.float32),
+                "v_scale": jnp.zeros((n_layers, batch, max_len, kvh),
+                                     jnp.float32),
+                "len": jnp.zeros((n_layers, batch), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((n_layers, batch, max_len, kvh, hd), cdt(cfg)),
+            "v": jnp.zeros((n_layers, batch, max_len, kvh, hd), cdt(cfg)),
+            "len": jnp.zeros((n_layers, batch), jnp.int32),
+        }
+    def mla(n_layers):
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((n_layers, batch, max_len, m.kv_lora_rank), cdt(cfg)),
+            "krope": jnp.zeros((n_layers, batch, max_len, 1, m.qk_rope_dim), cdt(cfg)),
+            "len": jnp.zeros((n_layers, batch), jnp.int32),
+        }
+    make = mla if cfg.mla is not None else kv
+    if cfg.moe is not None:
+        n_dense = cfg.moe.n_dense_layers
+        out = {"moe_layers": make(cfg.n_layers - n_dense)}
+        if n_dense:
+            out["dense_layers"] = make(n_dense)
+        return out
+    return {"layers": make(cfg.n_layers)}
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: tokens (B, 1) + caches -> (logits (B,1,V), caches)."""
+    x = params["embed"][tokens].astype(cdt(cfg))
+    new_cache: Dict = {}
+    # all layers share the same current length
+    first = next(iter(cache.values()))
+    positions = first["len"][0][:, None] + jnp.arange(tokens.shape[1])[None]
+    if cfg.moe is not None:
+        if "dense_layers" in params:
+            x, nc = _run_stack(params["dense_layers"], x, cfg, positions,
+                               cache["dense_layers"], False)
+            new_cache["dense_layers"] = nc
+        x, nc = _run_stack(params["moe_layers"], x, cfg, positions,
+                           cache["moe_layers"], True)
+        new_cache["moe_layers"] = nc
+    else:
+        x, nc = _run_stack(params["layers"], x, cfg, positions,
+                           cache["layers"], False)
+        new_cache["layers"] = nc
+    return _logits(params, x, cfg), new_cache

@@ -1,0 +1,148 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356): transformer backbone
+only — the conv/log-mel audio frontend is a STUB per the assignment
+(``input_specs`` supplies precomputed frame embeddings (B, n_frames, d)).
+
+Encoder: bidirectional self-attention over frames + learned positions.
+Decoder: causal self-attention (KV-cached) + cross-attention to the
+encoder output (K/V computed once at prefill and cached).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import apply_linear, linear_specs
+from repro.nn.module import ParamSpec, stack_specs
+from .layers import (apply_mlp, apply_norm, cdt, gqa_attend, gqa_specs,
+                     mlp_specs, norm_specs, pdt)
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": norm_specs(cfg), "attn": gqa_specs(cfg),
+            "ln2": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg):
+    return {"ln1": norm_specs(cfg), "self_attn": gqa_specs(cfg),
+            "ln2": norm_specs(cfg), "cross_attn": gqa_specs(cfg),
+            "ln3": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    return {
+        "enc_pos": ParamSpec((cfg.n_frontend_tokens, cfg.d_model), pdt(cfg),
+                             "normal:0.01", (None, "embed")),
+        "enc_layers": stack_specs(_enc_block_specs(cfg), cfg.enc_layers),
+        "enc_ln_f": norm_specs(cfg),
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), pdt(cfg), "normal:0.02",
+                           ("vocab", "embed")),
+        "dec_pos": ParamSpec((cfg.max_seq, cfg.d_model), pdt(cfg),
+                             "normal:0.01", (None, "embed")),
+        "dec_layers": stack_specs(_dec_block_specs(cfg), cfg.n_layers),
+        "dec_ln_f": norm_specs(cfg),
+    }
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, n_frames, d) stub embeddings -> encoder states."""
+    x = frames.astype(cdt(cfg)) + params["enc_pos"][None, :frames.shape[1]
+                                                    ].astype(cdt(cfg))
+    positions = jnp.arange(x.shape[1])
+
+    def blk(p, x):
+        h, _ = gqa_attend(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                          positions=positions, causal=False)
+        x = x + h
+        return x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+
+    fn = jax.checkpoint(blk) if cfg.remat else blk
+
+    if cfg.scan_layers:
+        def body(carry, p):
+            return fn(p, carry), None
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.enc_layers):
+            x = fn(jax.tree.map(lambda a: a[i], params["enc_layers"]), x)
+    return apply_norm(params["enc_ln_f"], x, cfg)
+
+
+def _dec_block(p, x, cfg, positions, enc_out, cache):
+    h, nc = gqa_attend(p["self_attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                       positions=positions, cache=cache)
+    x = x + h
+    h, _ = gqa_attend(p["cross_attn"], apply_norm(p["ln2"], x, cfg), cfg,
+                      positions=positions, x_kv=enc_out, causal=False)
+    x = x + h
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln3"], x, cfg), cfg)
+    return x, nc
+
+
+def decode(params: Dict, tokens: jnp.ndarray, enc_out: jnp.ndarray,
+           cfg: ModelConfig, cache: Optional[Dict] = None,
+           position_offset: jnp.ndarray | int = 0):
+    b, t = tokens.shape
+    if isinstance(position_offset, jnp.ndarray) and position_offset.ndim == 1:
+        pos_idx = position_offset[:, None] + jnp.arange(t)[None]  # (B, t)
+    else:
+        pos_idx = position_offset + jnp.arange(t)
+    x = params["embed"][tokens].astype(cdt(cfg)) \
+        + params["dec_pos"][pos_idx].astype(cdt(cfg))
+    positions = pos_idx
+    blk = partial(_dec_block, cfg=cfg, enc_out=enc_out, positions=positions)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    if cfg.scan_layers:
+        def body(carry, inp):
+            p, c = inp
+            y, nc = blk(p, carry, cache=c)
+            return y, nc
+        x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    else:
+        ncs = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            c_i = None if cache is None else jax.tree.map(
+                lambda a: a[i], cache)
+            x, nc_i = blk(p_i, x, cache=c_i)
+            ncs.append(nc_i)
+        new_cache = (None if cache is None
+                     else jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    x = apply_norm(params["dec_ln_f"], x, cfg)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt(cfg)))
+    return logits, new_cache
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Teacher-forced train step: extra_embeds = frame stub (B, F, d)."""
+    enc_out = encode(params, extra_embeds, cfg)
+    logits, _ = decode(params, tokens, enc_out, cfg, cache=None)
+    return logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, kvh, hd), cdt(cfg)),
+        "v": jnp.zeros((L, batch, max_len, kvh, hd), cdt(cfg)),
+        "len": jnp.zeros((L, batch), jnp.int32),
+        "enc_out": jnp.zeros((batch, cfg.n_frontend_tokens, cfg.d_model),
+                             cdt(cfg)),
+    }
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    sa = {"k": cache["k"], "v": cache["v"], "len": cache["len"]}
+    logits, new_sa = decode(params, tokens, cache["enc_out"], cfg, cache=sa,
+                            position_offset=cache["len"][0])
+    new_cache = dict(new_sa)
+    new_cache["enc_out"] = cache["enc_out"]
+    return logits, new_cache

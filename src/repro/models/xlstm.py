@@ -1,0 +1,358 @@
+"""xLSTM LM (arXiv:2405.04517): mLSTM blocks (matrix-memory, chunkwise-
+parallel like linear attention) at a 7:1 ratio with sLSTM blocks (scalar
+memory, strictly recurrent with exponential gating). Both carry O(1) state
+per layer, so long_500k decode is constant-memory — the sub-quadratic
+family the assignment routes long-context cells to.
+
+Stabilization follows the paper: log-sigmoid forget gates, exponential
+input gates, running max-state m so all exponentials are <= 1.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import apply_linear, linear_specs
+from repro.nn.module import ParamSpec, stack_specs
+from .layers import apply_norm, cdt, norm_specs, pdt
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    nh = cfg.n_heads
+    hd = d_inner // nh
+    return d_inner, nh, hd
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, nh, hd = _mlstm_dims(cfg)
+    dt = pdt(cfg)
+    return {
+        "ln": norm_specs(cfg),
+        "up": linear_specs(d, 2 * d_inner, cim=cfg.cim, in_axis="embed",
+                           out_axis="mlp", dtype=dt),
+        "conv_w": ParamSpec((4, d_inner), dt, "fan_in:1.0", (None, "mlp")),
+        "conv_b": ParamSpec((d_inner,), jnp.float32, "zeros", ("mlp",)),
+        "wq": linear_specs(d_inner, d_inner, cim=cfg.cim, in_axis="mlp",
+                           out_axis="heads", dtype=dt),
+        "wk": linear_specs(d_inner, d_inner, cim=cfg.cim, in_axis="mlp",
+                           out_axis="heads", dtype=dt),
+        "wv": linear_specs(d_inner, d_inner, cim=cfg.cim, in_axis="mlp",
+                           out_axis="heads", dtype=dt),
+        "w_if": linear_specs(d_inner, 2 * nh, in_axis="mlp", out_axis=None,
+                             dtype=jnp.float32),
+        "out_norm": {"scale": ParamSpec((d_inner,), jnp.float32, "ones", ("mlp",))},
+        "down": linear_specs(d_inner, d, cim=cfg.cim, in_axis="mlp",
+                             out_axis="embed", dtype=dt),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    k = w.shape[0]
+    xin = (jnp.concatenate([state, x], axis=1) if state is not None
+           else jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0))))
+    y = sum(xin[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    new_state = xin[:, -(k - 1):, :]
+    return jax.nn.silu(y + b[None, None]), new_state
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int, carry=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, L, H, hd); li, lf: (B, L, H) log input / log forget gates.
+    carry: optional (C, n, m) state. Returns y (B,L,H,hd) and final carry.
+    """
+    b, L, H, hd = q.shape
+    q = q.astype(jnp.float32) / jnp.sqrt(float(hd))
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    pad = (-L) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    shp = (b, nc, chunk, H)
+    qc = q.reshape(b, nc, chunk, H, hd).swapaxes(0, 1)
+    kc = k.reshape(b, nc, chunk, H, hd).swapaxes(0, 1)
+    vc = v.reshape(b, nc, chunk, H, hd).swapaxes(0, 1)
+    lic = li.reshape(shp).swapaxes(0, 1)
+    lfc = lf.reshape(shp).swapaxes(0, 1)
+
+    if carry is None:
+        C0 = jnp.zeros((b, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, H, hd), jnp.float32)
+        m0 = jnp.full((b, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = carry
+
+    def body(state, inp):
+        C, n, m = state
+        qb, kb, vb, lib, lfb = inp                       # (B, Q, H, ...)
+        F = jnp.cumsum(lfb, axis=1)                      # (B,Q,H) inclusive
+        p = lib - F                                      # source potentials
+        M = jnp.maximum(jax.lax.cummax(p, axis=1), m[:, None, :])
+        # intra-chunk: S[i,j] = (q_i . k_j) * exp(p_j - M_i), j <= i
+        dots = jnp.einsum("bihd,bjhd->bhij", qb, kb)
+        mask = jnp.tril(jnp.ones((qb.shape[1], qb.shape[1]), bool))
+        w_arg = (p.swapaxes(1, 2)[:, :, None, :]             # p_j
+                 - M.swapaxes(1, 2)[:, :, :, None])          # M_i
+        w_ij = jnp.exp(jnp.where(mask[None, None], w_arg, -jnp.inf))
+        S = dots * w_ij
+        y = jnp.einsum("bhij,bjhd->bihd", S, vb)
+        # inter-chunk state contribution: weight exp(m - M_i)
+        w_st = jnp.exp(m[:, None, :] - M)                    # (B,Q,H)
+        y = y + jnp.einsum("bihd,bhde->bihe", qb, C) * w_st[..., None]
+        # normalizer: q.n_i = row-sums of S plus the carried-state part
+        qn = jnp.swapaxes(jnp.sum(S, axis=-1), 1, 2) \
+            + jnp.einsum("bihd,bhd->bih", qb, n) * w_st
+        m_i = F + M
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))
+        y = y / denom[..., None]
+        # chunk-final state update
+        F_last = F[:, -1, :]                                 # (B,H)
+        m_new = F_last + jnp.maximum(m, jnp.max(p, axis=1))
+        w_c = jnp.exp(m + F_last - m_new)                    # carry decay
+        w_j = jnp.exp(F_last[:, None] + p - m_new[:, None])  # (B,Q,H)
+        C_new = C * w_c[..., None, None] + jnp.einsum(
+            "bjhd,bjhe,bjh->bhde", kb, vb, w_j)
+        n_new = n * w_c[..., None] + jnp.einsum("bjhd,bjh->bhd", kb, w_j)
+        return (C_new, n_new, m_new), y
+
+    (Cf, nf, mf), ys = jax.lax.scan(body, (C0, n0, m0),
+                                    (qc, kc, vc, lic, lfc))
+    y = ys.swapaxes(0, 1).reshape(b, Lp, H, hd)[:, :L]
+    return y, (Cf, nf, mf)
+
+
+def apply_mlstm(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    d_inner, nh, hd = _mlstm_dims(cfg)
+    b, L, _ = x.shape
+    h = apply_norm(p["ln"], x, cfg)
+    up = apply_linear(p["up"], h, cfg.cim, compute_dtype=cdt(cfg))
+    u, z = jnp.split(up, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    uc, new_conv = _causal_conv1d(u.astype(jnp.float32),
+                                  p["conv_w"].astype(jnp.float32),
+                                  p["conv_b"], conv_state)
+    uc = uc.astype(cdt(cfg))
+    q = apply_linear(p["wq"], uc, cfg.cim, compute_dtype=cdt(cfg)
+                     ).reshape(b, L, nh, hd)
+    k = apply_linear(p["wk"], uc, cfg.cim, compute_dtype=cdt(cfg)
+                     ).reshape(b, L, nh, hd)
+    v = apply_linear(p["wv"], u, cfg.cim, compute_dtype=cdt(cfg)
+                     ).reshape(b, L, nh, hd)
+    gates = apply_linear(p["w_if"], u.astype(jnp.float32), None,
+                         compute_dtype=jnp.float32)
+    li, lf_pre = jnp.split(gates, 2, axis=-1)                 # (B,L,nh)
+    lf = jax.nn.log_sigmoid(lf_pre)
+
+    carry = state["cell"] if state is not None else None
+    y, new_cell = _mlstm_chunked(q, k, v, li, lf, cfg.ssm.chunk, carry)
+    y = y.reshape(b, L, d_inner).astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = y * p["out_norm"]["scale"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = apply_linear(p["down"], y.astype(cdt(cfg)), cfg.cim,
+                       compute_dtype=cdt(cfg))
+    new_state = ({"conv": new_conv, "cell": new_cell}
+                 if state is not None else None)
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    nh = cfg.ssm.n_slstm_heads
+    hd = d // nh
+    dt = pdt(cfg)
+    f_ff = (4 * d) // 3
+    return {
+        "ln": norm_specs(cfg),
+        "wx": linear_specs(d, 4 * d, cim=cfg.cim, in_axis="embed",
+                           out_axis="mlp", dtype=dt),
+        "r": ParamSpec((4, nh, hd, hd), jnp.float32, "fan_in:1.0",
+                       (None, None, None, None)),
+        "bias": ParamSpec((4, d), jnp.float32, "zeros", (None, "embed")),
+        "ln_ffn": norm_specs(cfg),
+        "ffn_up": linear_specs(d, 2 * f_ff, cim=cfg.cim, in_axis="embed",
+                               out_axis="mlp", dtype=dt),
+        "ffn_down": linear_specs(f_ff, d, cim=cfg.cim, in_axis="mlp",
+                                 out_axis="embed", dtype=dt),
+    }
+
+
+def apply_slstm(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    d = cfg.d_model
+    nh = cfg.ssm.n_slstm_heads
+    hd = d // nh
+    b, L, _ = x.shape
+    xin = apply_norm(p["ln"], x, cfg)
+    wx = apply_linear(p["wx"], xin, cfg.cim, compute_dtype=cdt(cfg)
+                      ).astype(jnp.float32)
+    wx = wx + p["bias"].reshape(1, 1, 4 * d)
+    wz, wi, wf, wo = jnp.split(wx, 4, axis=-1)                # (B,L,d)
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+        c0 = jnp.zeros((b, nh, hd), jnp.float32)
+        n0 = jnp.full((b, nh, hd), 1e-6, jnp.float32)
+        m0 = jnp.full((b, nh, hd), -1e30, jnp.float32)
+    else:
+        h0, c0, n0, m0 = (state["h"], state["c"], state["n"], state["m"])
+
+    r = p["r"]
+
+    def step(carry, inp):
+        h, c, n, m = carry
+        z_t, i_t, f_t, o_t = inp                              # (B, d) each
+        rec = lambda g: jnp.einsum("bhk,hkj->bhj", h, r[g])
+        zt = jnp.tanh(z_t.reshape(b, nh, hd) + rec(0))
+        it = i_t.reshape(b, nh, hd) + rec(1)
+        ft = jax.nn.log_sigmoid(f_t.reshape(b, nh, hd) + rec(2))
+        ot = jax.nn.sigmoid(o_t.reshape(b, nh, hd) + rec(3))
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xs = (wz.swapaxes(0, 1), wi.swapaxes(0, 1), wf.swapaxes(0, 1),
+          wo.swapaxes(0, 1))
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    y = hs.swapaxes(0, 1).reshape(b, L, d)
+
+    out = x + y.astype(cdt(cfg))
+    # gated FFN (GeGLU, 4/3 expansion)
+    z2 = apply_norm(p["ln_ffn"], out, cfg)
+    up = apply_linear(p["ffn_up"], z2, cfg.cim, compute_dtype=cdt(cfg))
+    g, u = jnp.split(up, 2, axis=-1)
+    ff = apply_linear(p["ffn_down"],
+                      jax.nn.gelu(g.astype(jnp.float32)).astype(cdt(cfg)) * u,
+                      cfg.cim, compute_dtype=cdt(cfg))
+    out = out + ff
+    new_state = ({"h": hf, "c": cf, "n": nf, "m": mf}
+                 if state is not None else None)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+
+def _layer_kinds(cfg: ModelConfig):
+    every = cfg.ssm.slstm_every
+    return ["slstm" if every and (i % every == every - 1) else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    kinds = _layer_kinds(cfg)
+    n_m = kinds.count("mlstm")
+    n_s = kinds.count("slstm")
+    sp: Dict = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), pdt(cfg), "normal:0.02",
+                           ("vocab", "embed")),
+        "ln_f": norm_specs(cfg),
+        "mlstm_layers": stack_specs(mlstm_specs(cfg), n_m),
+        "lm_head": linear_specs(cfg.d_model, cfg.vocab, in_axis="embed",
+                                out_axis="vocab", dtype=pdt(cfg),
+                                init="normal:0.02"),
+    }
+    if n_s:
+        sp["slstm_layers"] = stack_specs(slstm_specs(cfg), n_s)
+    return sp
+
+
+def _iterate(params, x, cfg, states):
+    """Interleave mLSTM/sLSTM blocks in config order (unrolled: the two
+    stacks are inhomogeneous; sLSTM layers are few)."""
+    kinds = _layer_kinds(cfg)
+    mi = si = 0
+    new_states: Dict = {"mlstm": [], "slstm": []}
+    for kind in kinds:
+        if kind == "mlstm":
+            p_i = jax.tree.map(lambda a: a[mi], params["mlstm_layers"])
+            st = None if states is None else jax.tree.map(
+                lambda a: a[mi], states["mlstm"])
+            fn = jax.checkpoint(partial(apply_mlstm, cfg=cfg)) if cfg.remat \
+                else partial(apply_mlstm, cfg=cfg)
+            x, ns = fn(p_i, x, state=st)
+            new_states["mlstm"].append(ns)
+            mi += 1
+        else:
+            p_i = jax.tree.map(lambda a: a[si], params["slstm_layers"])
+            st = None if states is None else jax.tree.map(
+                lambda a: a[si], states["slstm"])
+            fn = jax.checkpoint(partial(apply_slstm, cfg=cfg)) if cfg.remat \
+                else partial(apply_slstm, cfg=cfg)
+            x, ns = fn(p_i, x, state=st)
+            new_states["slstm"].append(ns)
+            si += 1
+    if states is None:
+        return x, None
+    return x, {
+        "mlstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_states["mlstm"]),
+        "slstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_states["slstm"]),
+    }
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            extra_embeds=None) -> jnp.ndarray:
+    x = params["embed"][tokens].astype(cdt(cfg))
+    x, _ = _iterate(params, x, cfg, None)
+    x = apply_norm(params["ln_f"], x, cfg)
+    return apply_linear(params["lm_head"], x, None, compute_dtype=cdt(cfg))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    d_inner, nh, hd = _mlstm_dims(cfg)
+    kinds = _layer_kinds(cfg)
+    n_m, n_s = kinds.count("mlstm"), kinds.count("slstm")
+    d = cfg.d_model
+    nsh = cfg.ssm.n_slstm_heads
+    shd = d // nsh
+    cache = {
+        "mlstm": {
+            "conv": jnp.zeros((n_m, batch, 3, d_inner), jnp.float32),
+            "cell": (jnp.zeros((n_m, batch, nh, hd, hd), jnp.float32),
+                     jnp.zeros((n_m, batch, nh, hd), jnp.float32),
+                     jnp.full((n_m, batch, nh), -1e30, jnp.float32)),
+        },
+        "slstm": {
+            "h": jnp.zeros((n_s, batch, nsh, shd), jnp.float32),
+            "c": jnp.zeros((n_s, batch, nsh, shd), jnp.float32),
+            "n": jnp.full((n_s, batch, nsh, shd), 1e-6, jnp.float32),
+            "m": jnp.full((n_s, batch, nsh, shd), -1e30, jnp.float32),
+        },
+    }
+    return cache
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    x = params["embed"][tokens].astype(cdt(cfg))
+    x, new_cache = _iterate(params, x, cfg, cache)
+    x = apply_norm(params["ln_f"], x, cfg)
+    return apply_linear(params["lm_head"], x, None,
+                        compute_dtype=cdt(cfg)), new_cache

@@ -1,0 +1,134 @@
+"""Zamba2 hybrid (arXiv:2411.15242): a Mamba2 backbone with a *shared*
+transformer block (one set of attention+MLP weights) invoked every
+``attn_every`` SSM layers — the weight sharing is genuine: a single
+parameter set applied at multiple depths, each application with its own
+KV cache at decode time.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.linear import apply_linear, linear_specs
+from repro.nn.module import ParamSpec, stack_specs
+from .layers import (apply_mlp, apply_norm, cdt, gqa_attend, gqa_specs,
+                     mlp_specs, norm_specs, pdt)
+from .mamba2 import apply_mamba2, init_mamba_state, mamba2_specs
+
+
+def _n_attn(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def specs(cfg: ModelConfig) -> Dict:
+    sp: Dict = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), pdt(cfg), "normal:0.02",
+                           ("vocab", "embed")),
+        "ln_f": norm_specs(cfg),
+        "mamba_layers": stack_specs(mamba2_specs(cfg), cfg.n_layers),
+        "lm_head": linear_specs(cfg.d_model, cfg.vocab, in_axis="embed",
+                                out_axis="vocab", dtype=pdt(cfg),
+                                init="normal:0.02"),
+    }
+    if cfg.attn_every:
+        sp["shared_attn"] = {                 # ONE weight set, reused
+            "ln1": norm_specs(cfg),
+            "attn": gqa_specs(cfg),
+            "ln2": norm_specs(cfg),
+            "mlp": mlp_specs(cfg),
+        }
+    return sp
+
+
+def _shared_block(p, x, cfg, positions, cache):
+    h, nc = gqa_attend(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                       positions=positions, cache=cache)
+    x = x + h
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+    return x, nc
+
+
+def _run(params, x, cfg: ModelConfig, positions, states):
+    """Groups of ``attn_every`` scanned Mamba2 layers, shared attn between."""
+    every = cfg.attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // every
+    mam = partial(apply_mamba2, cfg=cfg)
+    if cfg.remat:
+        mam = jax.checkpoint(mam)
+    new_mamba, new_attn = [], []
+    for g in range(n_groups):
+        sl = slice(g * every, (g + 1) * every)
+        p_g = jax.tree.map(lambda a: a[sl], params["mamba_layers"])
+        s_g = None if states is None else jax.tree.map(
+            lambda a: a[sl], states["mamba"])
+
+        if cfg.scan_layers:
+            def body(carry, inp):
+                p_i, st = inp
+                y, ns = mam(p_i, carry, state=st)
+                return y, ns
+            x, ns = jax.lax.scan(body, x, (p_g, s_g))
+        else:
+            ns_list = []
+            for i in range(every):
+                p_i = jax.tree.map(lambda a: a[i], p_g)
+                s_i = None if s_g is None else jax.tree.map(
+                    lambda a: a[i], s_g)
+                x, ns_i = mam(p_i, x, state=s_i)
+                ns_list.append(ns_i)
+            ns = (None if states is None
+                  else jax.tree.map(lambda *xs: jnp.stack(xs), *ns_list))
+        new_mamba.append(ns)
+        if "shared_attn" in params:
+            c_g = None if states is None else jax.tree.map(
+                lambda a: a[g], states["attn"])
+            blk = partial(_shared_block, cfg=cfg, positions=positions)
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x, nc = blk(params["shared_attn"], x, cache=c_g)
+            new_attn.append(nc)
+    if states is None:
+        return x, None
+    return x, {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_mamba),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn),
+    }
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            extra_embeds=None) -> jnp.ndarray:
+    x = params["embed"][tokens].astype(cdt(cfg))
+    positions = jnp.arange(x.shape[1])
+    x, _ = _run(params, x, cfg, positions, None)
+    x = apply_norm(params["ln_f"], x, cfg)
+    return apply_linear(params["lm_head"], x, None, compute_dtype=cdt(cfg))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    st = init_mamba_state(cfg, batch)
+    n_attn = _n_attn(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape
+                                       ).copy(), st),
+        "attn": {
+            "k": jnp.zeros((n_attn, batch, max_len, kvh, hd), cdt(cfg)),
+            "v": jnp.zeros((n_attn, batch, max_len, kvh, hd), cdt(cfg)),
+            "len": jnp.zeros((n_attn, batch), jnp.int32),
+        },
+    }
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    x = params["embed"][tokens].astype(cdt(cfg))
+    positions = cache["attn"]["len"][0][:, None] + jnp.arange(tokens.shape[1])[None]
+    x, new_cache = _run(params, x, cfg, positions, cache)
+    x = apply_norm(params["ln_f"], x, cfg)
+    return apply_linear(params["lm_head"], x, None,
+                        compute_dtype=cdt(cfg)), new_cache

@@ -1,0 +1,10 @@
+from .module import (ParamSpec, constrain, eval_shape_params, init_params,
+                     logical_to_mesh, param_shardings, resolve_pspec,
+                     set_activation_rules, stack_specs)
+from .linear import apply_linear, linear_specs
+
+__all__ = [
+    "ParamSpec", "apply_linear", "constrain", "eval_shape_params",
+    "init_params", "linear_specs", "logical_to_mesh", "param_shardings",
+    "resolve_pspec", "set_activation_rules", "stack_specs",
+]

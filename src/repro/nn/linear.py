@@ -1,0 +1,67 @@
+"""CIM-aware dense layer: one entry point for every stored-weight matmul.
+
+``linear_specs`` emits the weight plus — when CIM quantization is enabled —
+the paper's learnable scale factors (s_w at weight granularity, s_p at psum
+granularity, s_a for activations) with shardings aligned to the weight's
+output axis; ``apply_linear`` dispatches to the plain matmul or the CIM
+forward (emulate/deploy).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_linear import CIMConfig, cim_linear
+from .module import ParamSpec
+
+
+def linear_specs(
+    k: int,
+    n: int,
+    *,
+    cim: Optional[CIMConfig] = None,
+    in_axis: Optional[str] = None,
+    out_axis: Optional[str] = None,
+    dtype=jnp.float32,
+    init: str | None = None,
+) -> Dict[str, ParamSpec]:
+    w_init = init or "fan_in:1.0"
+    if cim is not None and cim.enabled and cim.mode == "deploy":
+        # packed-int inference: weights live ONLY as digit planes
+        t = cim.tiling(k, n)
+        store = jnp.int4 if (cim.pack_dtype == "int4"
+                             and cim.cell_bits <= 3) else jnp.int8
+        specs = {"w_digits": ParamSpec(
+            (t.n_split, t.k_tiles, t.array_rows, n), store, "zeros",
+            (None, None, None, out_axis))}
+    else:
+        specs = {"w": ParamSpec((k, n), dtype, w_init, (in_axis, out_axis))}
+    if cim is not None and cim.enabled:
+        t = cim.tiling(k, n)
+        wg = t.weight_scale_shape(cim.weight_granularity)
+        pg = t.psum_scale_shape(cim.psum_granularity)
+        # scales follow the weight's output-axis sharding when they have a
+        # full-N axis; tile-level axes stay replicated.
+        w_sp = (None, out_axis if wg[1] == n else None)
+        p_sp = (None, None, out_axis if pg[2] == n else None)
+        specs["s_w"] = ParamSpec(wg, jnp.float32, "const:0.05", w_sp)
+        specs["s_p"] = ParamSpec(pg, jnp.float32, "const:8.0", p_sp)
+        specs["s_a"] = ParamSpec((1,), jnp.float32, "ones", (None,))
+    return specs
+
+
+def apply_linear(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cim: Optional[CIMConfig] = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+    variation_key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    if cim is None or not cim.enabled:
+        return jnp.dot(x.astype(compute_dtype),
+                       params["w"].astype(compute_dtype))
+    return cim_linear(x, params, cim, variation_key=variation_key,
+                      compute_dtype=compute_dtype)

@@ -1,0 +1,5 @@
+from .optimizer import (adafactor_init, adamw_init, make_optimizer, sgdm_init)
+from .schedule import cosine_warmup
+
+__all__ = ["adafactor_init", "adamw_init", "cosine_warmup", "make_optimizer",
+           "sgdm_init"]

@@ -1,0 +1,172 @@
+"""Optimizers (no optax on this box): AdamW with configurable state dtype
+(bf16 states halve optimizer HBM — how deepseek-v3-671b train fits 512
+chips), Adafactor (factored second moment: O(n+m) instead of O(nm) state),
+and SGD-momentum. All are pytree->pytree pure functions:
+
+  state = <name>_init(params, dtype)
+  params, state = step(params, grads, state, lr, ...)
+
+Global-norm clipping and decoupled weight decay are applied inside step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.asarray(0.0)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_step(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+               weight_decay=0.1, grad_clip=1.0):
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    t = state["step"] + 1
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step_ + weight_decay * pf)
+        return pf.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": t}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments for >=2D params)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor_init(params, state_dtype=jnp.float32):
+    def init_leaf(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], state_dtype),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], state_dtype)}
+        return {"v": jnp.zeros(p.shape, state_dtype)}
+    return {"v": jax.tree.map(init_leaf, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_step(params, grads, state, lr, *, decay=0.99, eps=1e-30,
+                   weight_decay=0.0, grad_clip=1.0, clip_threshold=1.0):
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    t = state["step"] + 1
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p.shape):
+            vr = decay * v["vr"].astype(jnp.float32) + (1 - decay) * g2.mean(-1)
+            vc = decay * v["vc"].astype(jnp.float32) + (1 - decay) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], eps))
+            u = gf / jnp.sqrt(denom + eps)
+            new_v = {"vr": vr.astype(v["vr"].dtype), "vc": vc.astype(v["vc"].dtype)}
+        else:
+            vv = decay * v["v"].astype(jnp.float32) + (1 - decay) * g2
+            u = gf / jnp.sqrt(vv + eps)
+            new_v = {"v": vv.astype(v["v"].dtype)}
+        # update clipping (adafactor RMS rule)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * u - lr * weight_decay * pf
+        return pf.astype(p.dtype), new_v
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    out = jax.tree.map(upd, params, grads, state["v"], is_leaf=None)
+    # jax.tree.map zips params/grads with the state subtree; unpack tuples
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"v": new_v, "step": t}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgdm_init(params, state_dtype=jnp.float32):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype),
+                                params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_step(params, grads, state, lr, *, momentum=0.9, weight_decay=0.0,
+              grad_clip=1.0):
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m_new = momentum * m.astype(jnp.float32) + gf
+        return ((p.astype(jnp.float32) - lr * m_new).astype(p.dtype),
+                m_new.astype(m.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["mom"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mom": new_m, "step": state["step"] + 1}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    step: Callable               # (params, grads, state, lr, **kw)
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(adamw_init, adamw_step)
+    if name == "adafactor":
+        return Optimizer(adafactor_init, adafactor_step)
+    if name == "sgdm":
+        return Optimizer(sgdm_init, sgdm_step)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,4 @@
+from .fault_tolerance import FaultTolerantLoop, TrainLoopState
+from .straggler import StragglerMonitor
+
+__all__ = ["FaultTolerantLoop", "StragglerMonitor", "TrainLoopState"]

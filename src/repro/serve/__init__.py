@@ -1,0 +1,3 @@
+from .engine import ServingEngine, make_decode_step, make_prefill
+
+__all__ = ["ServingEngine", "make_decode_step", "make_prefill"]

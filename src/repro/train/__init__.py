@@ -1,0 +1,3 @@
+from .trainer import lm_loss_fn, make_train_step
+
+__all__ = ["lm_loss_fn", "make_train_step"]

@@ -1,0 +1,87 @@
+"""int8 gradient compression with error feedback.
+
+Data-parallel gradient synchronization as reduce-scatter (f32, exact) +
+int8 all-gather: each device averages its shard exactly, quantizes it to
+int8 with a per-shard scale, and all-gathers the compressed bytes — 4x
+fewer all-gather bytes than f32 (2x vs bf16). The local quantization
+residual is carried in an error-feedback buffer and added to the next
+step's gradient, which keeps SGD/Adam convergence unbiased in practice
+(Karimireddy et al. 2019).
+
+Exposed as pure functions usable inside shard_map (production path) and as
+a single-device fallback (identity sync) so the trainer is mesh-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_leaf(g: jnp.ndarray, ef: jnp.ndarray, axis_name: str
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: synchronize one gradient leaf across ``axis_name``
+    with int8 compression + error feedback. Returns (g_synced, ef_new)."""
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    flat = g.reshape(-1).astype(jnp.float32) + ef.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shard_len = flat.shape[0] // n
+    # exact reduce-scatter: every device ends up with the mean of its shard
+    shards = flat.reshape(n, shard_len)
+    my_shard = jax.lax.psum_scatter(shards, axis_name, scatter_dimension=0,
+                                    tiled=False) / n
+    # compress my shard, all-gather compressed
+    q, scale = quantize_int8(my_shard)
+    q_all = jax.lax.all_gather(q, axis_name)                  # (n, shard) int8
+    s_all = jax.lax.all_gather(scale, axis_name)              # (n,)
+    synced = (q_all.astype(jnp.float32) * s_all[:, None]).reshape(-1)
+    # local error feedback: what my shard lost in quantization, scattered
+    # back to this device's region of the flat gradient
+    err_local = my_shard - dequantize_int8(q, scale)
+    ef_flat = jnp.zeros_like(flat)
+    ef_flat = jax.lax.dynamic_update_slice(ef_flat, err_local,
+                                           (idx * shard_len,))
+    if pad:
+        synced = synced[:-pad]
+        ef_flat = ef_flat[:-pad]
+    return synced.reshape(g.shape).astype(g.dtype), ef_flat.reshape(g.shape)
+
+
+def compressed_psum_tree(grads, ef_state, axis_name: str):
+    """Apply compressed_psum_leaf across a gradient pytree."""
+    out = jax.tree.map(
+        lambda g, e: compressed_psum_leaf(g, e, axis_name), grads, ef_state)
+    synced = jax.tree.map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return synced, new_ef
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(params) -> float:
+    """Collective-byte ratio vs f32 all-reduce (for the roofline ledger):
+    RS stays f32 (exact) but AG moves int8 + one f32 scale per shard."""
+    total = sum(l.size for l in jax.tree.leaves(params))
+    f32_bytes = 2 * 4 * total            # RS + AG at f32
+    comp_bytes = 4 * total + 1 * total   # RS f32 + AG int8 (scales ~0)
+    return comp_bytes / f32_bytes

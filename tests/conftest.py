@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests run single-device (the 512-device override is dryrun.py-only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

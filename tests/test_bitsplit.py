@@ -1,0 +1,56 @@
+"""Bit-split decomposition properties (paper Fig. 5)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitsplit import place_values, recombine, split_digits
+from repro.core.granularity import n_splits
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    wb_cb=st.sampled_from([(2, 1), (3, 1), (3, 2), (3, 3), (4, 2), (4, 1),
+                           (4, 4), (8, 2), (8, 3), (6, 2)]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_roundtrip_exact(wb_cb, seed):
+    wb, cb = wb_cb
+    rng = np.random.RandomState(seed)
+    w = rng.randint(-(2 ** (wb - 1)), 2 ** (wb - 1), size=(13, 7)
+                    ).astype(np.float32)
+    d = split_digits(jnp.asarray(w), wb, cb)
+    assert d.shape == (n_splits(wb, cb),) + w.shape
+    r = recombine(d, wb, cb)
+    assert np.array_equal(np.asarray(r), w)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    wb_cb=st.sampled_from([(3, 1), (4, 2), (8, 3)]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_digit_ranges_fit_cells(wb_cb, seed):
+    """Sign-magnitude differential encoding: each physical cell stores an
+    unsigned digit < 2^c; the sign is the G+/G- pair assignment, so all of
+    a weight's digits share its sign."""
+    wb, cb = wb_cb
+    rng = np.random.RandomState(seed)
+    w = rng.randint(-(2 ** (wb - 1)), 2 ** (wb - 1), size=(64,)
+                    ).astype(np.float32)
+    d = np.asarray(split_digits(jnp.asarray(w), wb, cb))
+    assert np.abs(d).max() < 2 ** cb
+    # sign consistency per weight: no digit opposes its weight's sign
+    signs = np.sign(w)[None, :]
+    assert np.all(d * signs >= 0)
+
+
+def test_place_values():
+    assert np.allclose(np.asarray(place_values(4, 2)), [1.0, 4.0])
+    assert np.allclose(np.asarray(place_values(3, 1)), [1.0, 2.0, 4.0])
+
+
+def test_binary_weight_single_split():
+    w = jnp.asarray([-1.0, 1.0, -1.0])
+    d = split_digits(w, 1, 1)
+    assert d.shape == (1, 3)
+    assert np.array_equal(np.asarray(recombine(d, 1, 1)), np.asarray(w))

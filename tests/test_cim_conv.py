@@ -1,0 +1,112 @@
+"""CIM convolution framework (paper §III-C): group-conv tiling vs the
+naive per-array loop, quantization behaviour, dequant-overhead accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CIMConfig, Granularity, calibrate_cim_conv,
+                        cim_conv2d, conv_dequant_muls, conv_tiling,
+                        init_cim_conv)
+from repro.core.bitsplit import place_values, split_digits
+from repro.core.cim_conv import _quantize_conv_weight_int
+from repro.core.cim_linear import _quantize_act
+
+
+def _cfg(**kw):
+    base = dict(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=6, array_rows=64, array_cols=64,
+                act_signed=False)
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def test_group_conv_equals_per_array_loop():
+    """The paper's group-convolution trick must produce exactly the same
+    per-array partial sums as sequentially convolving each channel slice
+    (the 'sequential array indexing' it eliminates)."""
+    cfg = _cfg(psum_quant=False)
+    kh = kw_ = 3
+    c_in, c_out, b = 19, 10, 2
+    key = jax.random.PRNGKey(0)
+    p = init_cim_conv(key, kh, kw_, c_in, c_out, cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (b, 8, 8, c_in)))
+    p = calibrate_cim_conv(x, p, cfg)
+
+    y_framework = cim_conv2d(x, p, cfg, compute_dtype=jnp.float32)
+
+    # naive reference: quantize identically, loop arrays sequentially
+    t, cpa = conv_tiling(kh, kw_, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                         cfg.weight_bits, cfg.cell_bits)
+    a_int, s_a = _quantize_act(x, p, cfg)
+    w_int = _quantize_conv_weight_int(p, cfg, t, cpa, kh, kw_, c_in, c_out)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
+    places = place_values(cfg.weight_bits, cfg.cell_bits)
+    s_w = t.broadcast_weight_scale(p["s_w"])
+    y_ref = 0.0
+    for ti in range(t.k_tiles):
+        lo, hi = ti * cpa, min((ti + 1) * cpa, c_in)
+        for s in range(digits.shape[0]):
+            psum = jax.lax.conv_general_dilated(
+                a_int[..., lo:hi].astype(jnp.float32),
+                digits[s, :, :, lo:hi, :].astype(jnp.float32),
+                (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            y_ref += psum * places[s] * s_w[ti][None, None, None, :]
+    y_ref = y_ref * jnp.maximum(s_a, 1e-9)
+    np.testing.assert_allclose(np.asarray(y_framework), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv_tiling_keeps_kernels_intact():
+    t, cpa = conv_tiling(3, 3, 64, 32, 128, 128, 4, 2)
+    # an array holds whole stretched kernels: rows used = cpa * 9 <= 128
+    assert cpa == 14 and t.array_rows == 126
+    assert t.k_tiles == int(np.ceil(64 / 14))
+
+
+def test_dequant_overhead_paper_fig8_ordering():
+    """col/col costs the same as layer/col and more than layer/array."""
+    t, _ = conv_tiling(3, 3, 64, 64, 128, 128, 4, 2)
+    ll = t.dequant_muls(Granularity.LAYER, Granularity.LAYER)
+    la = t.dequant_muls(Granularity.LAYER, Granularity.ARRAY)
+    lc = t.dequant_muls(Granularity.LAYER, Granularity.COLUMN)
+    cc = t.dequant_muls(Granularity.COLUMN, Granularity.COLUMN)
+    ca = t.dequant_muls(Granularity.COLUMN, Granularity.ARRAY)
+    assert ll == 1
+    assert ll < la < lc
+    assert cc == lc                    # the paper's zero-extra-overhead claim
+    assert ca == lc                    # finest granularity dominates
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_stride_and_shapes(stride):
+    cfg = _cfg()
+    p = init_cim_conv(jax.random.PRNGKey(0), 3, 3, 8, 12, cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 8)))
+    p = calibrate_cim_conv(x, p, cfg, stride=stride)
+    y = cim_conv2d(x, p, cfg, stride=stride, compute_dtype=jnp.float32)
+    assert y.shape == (2, 8 // stride, 8 // stride, 12)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_conv_grads_flow():
+    cfg = _cfg()
+    p = init_cim_conv(jax.random.PRNGKey(0), 3, 3, 8, 12, cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 8)))
+    p = calibrate_cim_conv(x, p, cfg)
+
+    def loss(p):
+        return jnp.sum(cim_conv2d(x, p, cfg, compute_dtype=jnp.float32) ** 2)
+    g = jax.grad(loss)(p)
+    for name in ("w", "s_w", "s_p", "s_a"):
+        gn = float(jnp.linalg.norm(g[name]))
+        assert np.isfinite(gn) and gn > 0, name
+
+
+def test_1x1_conv():
+    cfg = _cfg(array_rows=16)
+    p = init_cim_conv(jax.random.PRNGKey(0), 1, 1, 24, 8, cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 4, 4, 24)))
+    p = calibrate_cim_conv(x, p, cfg)
+    y = cim_conv2d(x, p, cfg, compute_dtype=jnp.float32)
+    assert y.shape == (2, 4, 4, 8) and bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,88 @@
+"""Property tests for the LSQ quantizer (paper §III-A / ref [10])."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizer import lsq_fake_quant, qrange, round_ste
+
+
+@given(bits=st.integers(2, 8), signed=st.booleans())
+def test_qrange_levels(bits, signed):
+    qn, qp = qrange(bits, signed)
+    assert qp - qn + 1 == 2 ** bits
+    if signed:
+        assert qn < 0 < qp + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    scale=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_lsq_on_grid_and_bounded_error(bits, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+    s = jnp.asarray(scale, jnp.float32)
+    y = lsq_fake_quant(x, s, bits)
+    qn, qp = qrange(bits, True)
+    codes = np.asarray(y) / scale
+    assert np.all(codes >= qn - 1e-4) and np.all(codes <= qp + 1e-4)
+    # quantized values sit on the integer grid
+    assert np.allclose(codes, np.round(codes), atol=1e-4)
+    # in-range inputs are within half a step
+    inside = (np.asarray(x) / scale >= qn) & (np.asarray(x) / scale <= qp)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert np.all(err[inside] <= 0.5 * scale + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), bits=st.integers(2, 6))
+def test_lsq_idempotent(seed, bits):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+    s = jnp.asarray(0.1, jnp.float32)
+    y1 = lsq_fake_quant(x, s, bits)
+    y2 = lsq_fake_quant(y1, s, bits)
+    assert np.allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_lsq_gradients_ste():
+    x = jnp.asarray([0.04, -0.26, 5.0, -5.0])  # in, in, clipped hi, lo
+    s = jnp.asarray(0.1, jnp.float32)
+    bits = 3                                    # range [-4, 3]
+
+    gx = jax.grad(lambda x_: lsq_fake_quant(x_, s, bits).sum())(x)
+    # STE: unit gradient inside the clip range, zero outside
+    assert np.allclose(np.asarray(gx), [1.0, 1.0, 0.0, 0.0])
+
+    gs = jax.grad(lambda s_: lsq_fake_quant(x, s_, bits).sum())(s)
+    assert np.isfinite(float(gs))
+    # clipped values pull the scale up (positive qp/qn contributions dominate)
+    g_hi = jax.grad(lambda s_: lsq_fake_quant(jnp.asarray([5.0]), s_, bits
+                                              ).sum())(s)
+    assert float(g_hi) > 0
+
+
+def test_binary_sign_quantization():
+    x = jnp.asarray([-0.4, -0.01, 0.02, 3.0])
+    s = jnp.asarray(0.5, jnp.float32)
+    y = lsq_fake_quant(x, s, bits=1)
+    assert np.allclose(np.asarray(y), [-0.5, -0.5, 0.5, 0.5])
+
+
+def test_round_ste_grad_is_identity():
+    g = jax.grad(lambda x: round_ste(x).sum())(jnp.asarray([0.3, 1.7]))
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_per_column_scales_broadcast(seed):
+    """Column-wise scales quantize each column at its own step size."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 4))
+    s = jnp.asarray([[0.01, 0.1, 1.0, 10.0]], jnp.float32)
+    y = lsq_fake_quant(x, s, bits=4)
+    for c, sc in enumerate([0.01, 0.1, 1.0, 10.0]):
+        codes = np.asarray(y)[:, c] / sc
+        assert np.allclose(codes, np.round(codes), atol=1e-3)
