@@ -1,0 +1,115 @@
+"""Conv-kernel microbenchmark: the fused Pallas conv deploy path vs the
+emulate grouped-conv path (the paper's dominant ResNet workload).
+
+On this CPU box the Pallas kernel runs in interpret mode, so wall-clock
+favors XLA — the meaningful numbers are correctness (deploy == emulate)
+and the HBM-traffic model: the emulate path tiles the activation
+channel-slices ``n_split``x into the group axis AND round-trips the full
+(B, H', W', S, kt, C_out) partial-sum tensor through HBM before ADC
+quantization; the fused kernel reads int8 patches once per split via its
+BlockSpec index map and quantizes each array-tile accumulator in VMEM
+(DESIGN.md §3, §7).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CIMConfig, calibrate_cim_conv, cim_conv2d,
+                        conv_tiling, init_cim_conv, pack_deploy_conv)
+from repro.kernels.ref import conv_pads
+
+from .bench_kernel import dtype_bytes
+
+
+def conv_traffic_model(b, h, w, c_out, kh, kw, stride, padding, tiling,
+                       *, act_dtype="int8", pack_dtype="int8"):
+    """HBM bytes for one conv layer: fused deploy kernel vs the naive
+    (emulate) grouped-conv pipeline. ``tiling`` is the ArrayTiling from
+    ``conv_tiling`` (the kernel's actual geometry — not re-derived here).
+    Returns (fused, naive, psum_rt) where psum_rt is the partial-sum
+    round-trip the fusion eliminates (2 * B*H'*W' * S * kt * C_out * 4)."""
+    n_split, k_tiles, rows = tiling.n_split, tiling.k_tiles, tiling.array_rows
+    cpa = rows // (kh * kw)
+    pads = conv_pads(h, w, kh, kw, stride, padding)
+    ho = (h + pads[0][0] + pads[0][1] - kh) // stride + 1
+    wo = (w + pads[1][0] + pads[1][1] - kw) // stride + 1
+    m = b * ho * wo
+    ba, bd = dtype_bytes(act_dtype), dtype_bytes(pack_dtype)
+    scales = 2 * n_split * k_tiles * c_out * 4
+    fused = int(m * k_tiles * rows * ba             # patches, read once
+                + n_split * k_tiles * rows * c_out * bd
+                + m * c_out * 4 + scales)
+    psum_rt = 2 * m * n_split * k_tiles * c_out * 4
+    naive = int(2 * b * h * w * n_split * k_tiles * cpa * 4  # tiled acts w+r
+                + n_split * k_tiles * rows * c_out * 4       # f32 weights
+                + psum_rt
+                + m * c_out * 4 + scales)
+    return fused, naive, psum_rt
+
+
+def run(csv=None):
+    b, hw, c_in, c_out, kh = 4, 16, 32, 64, 3
+    stride, padding = 1, "SAME"
+    cfg = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=128, array_cols=128,
+                    act_signed=False)
+    key = jax.random.PRNGKey(0)
+    p = init_cim_conv(key, kh, kh, c_in, c_out, cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1),
+                                      (b, hw, hw, c_in)))
+    p = calibrate_cim_conv(x, p, cfg, stride=stride, padding=padding)
+    dp = pack_deploy_conv(p, cfg)
+
+    variants = (
+        ("emulate_groupconv", p, cfg),
+        ("deploy_jnp_ref", dp, cfg.replace(mode="deploy", use_kernel=False)),
+        ("deploy_pallas_interpret", dp,
+         cfg.replace(mode="deploy", use_kernel=True)),
+    )
+    out0 = None
+    results = []
+    for name, params, c in variants:
+        fn = jax.jit(lambda x_, params=params, c=c: cim_conv2d(
+            x_, params, c, stride=stride, padding=padding,
+            compute_dtype=jnp.float32))
+        out = fn(x)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fn(x)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        results.append((name, us))
+        if out0 is None:
+            out0 = out
+        else:
+            np.testing.assert_allclose(np.asarray(out0), np.asarray(out),
+                                       rtol=1e-4, atol=1e-4)
+
+    t, _ = conv_tiling(kh, kh, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                       cfg.weight_bits, cfg.cell_bits)
+    print("\n== conv kernel microbench (CPU; kernel in interpret mode) ==")
+    for name, us in results:
+        line = f"conv_kernel,{name},us_per_call={us:.0f}"
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    for pack in ("int8", "int4"):
+        fused, naive, psum_rt = conv_traffic_model(
+            b, hw, hw, c_out, kh, kh, stride, padding, t, pack_dtype=pack)
+        line = (f"conv_kernel,hbm_traffic_model,pack={pack},"
+                f"fused_bytes={fused},naive_bytes={naive},"
+                f"psum_roundtrip_bytes={psum_rt},"
+                f"saving={naive/fused:.2f}x")
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -15,11 +15,24 @@ import numpy as np
 from repro.kernels import ops
 
 
-def traffic_model(m, k, n, n_split, array_rows, bytes_act=4, bytes_dig=1):
-    """HBM bytes: fused kernel vs materializing every (split, tile) psum."""
+def dtype_bytes(name: str) -> float:
+    """Bytes per element for the deploy storage dtypes."""
+    return {"int4": 0.5, "int8": 1.0, "bfloat16": 2.0, "float32": 4.0}[name]
+
+
+def traffic_model(m, k, n, n_split, array_rows, *, act_dtype="int8",
+                  pack_dtype="int8"):
+    """HBM bytes: fused kernel vs materializing every (split, tile) psum.
+
+    Byte widths follow what the deploy path actually stores: activation
+    codes are int8 (cim_linear casts when the act_bits range fits) and
+    digit planes are ``cfg.pack_dtype`` (int8, or int4 for <=3-bit
+    cells) — not the 4-byte floats the emulate path moves."""
+    bytes_act = dtype_bytes(act_dtype)
+    bytes_dig = dtype_bytes(pack_dtype)
     k_tiles = (k + array_rows - 1) // array_rows
-    fused = (m * k * bytes_act + n_split * k * n * bytes_dig + m * n * 4
-             + 2 * n_split * k_tiles * n * 4)
+    fused = int(m * k * bytes_act + n_split * k * n * bytes_dig + m * n * 4
+                + 2 * n_split * k_tiles * n * 4)
     naive = fused + 2 * m * n_split * k_tiles * n * 4   # psum write+read
     return fused, naive
 
@@ -53,18 +66,20 @@ def run(csv=None):
             np.testing.assert_allclose(np.asarray(out_k), np.asarray(out),
                                        rtol=1e-5, atol=1e-4)
 
-    fused, naive = traffic_model(m, k_tiles * rows, n, n_split, rows)
     print("\n== kernel microbench (CPU; kernel in interpret mode) ==")
     for name, us in results:
         line = f"kernel,{name},us_per_call={us:.0f}"
         print(line)
         if csv is not None:
             csv.append(line)
-    line = (f"kernel,hbm_traffic_model,fused_bytes={fused},naive_bytes={naive},"
-            f"saving={naive/fused:.2f}x")
-    print(line)
-    if csv is not None:
-        csv.append(line)
+    for pack in ("int8", "int4"):
+        fused, naive = traffic_model(m, k_tiles * rows, n, n_split, rows,
+                                     pack_dtype=pack)
+        line = (f"kernel,hbm_traffic_model,pack={pack},fused_bytes={fused},"
+                f"naive_bytes={naive},saving={naive/fused:.2f}x")
+        print(line)
+        if csv is not None:
+            csv.append(line)
     return results
 
 

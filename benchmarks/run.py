@@ -17,23 +17,29 @@ def main(argv=None) -> None:
                     help="QAT steps per scheme (paper uses 200 epochs; this"
                          " is the scaled-down CPU setting)")
     ap.add_argument("--fast", action="store_true",
-                    help="minimal steps (CI smoke)")
+                    help="minimal QAT steps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="analytic + kernel benches only (CI smoke; skips "
+                         "the QAT/LM training benches, which take tens of "
+                         "minutes on CPU)")
     args = ap.parse_args(argv)
     steps = 30 if args.fast else args.steps
 
-    from . import (bench_dequant_overhead, bench_granularity, bench_kernel,
-                   bench_lm_cim, bench_psum_range, bench_qat_stages,
-                   bench_variation)
+    from . import (bench_conv_kernel, bench_dequant_overhead,
+                   bench_granularity, bench_kernel, bench_lm_cim,
+                   bench_psum_range, bench_qat_stages, bench_variation)
 
     csv = []
     t0 = time.time()
     bench_dequant_overhead.run(csv=csv)            # Fig. 8 (analytic)
     bench_psum_range.run(csv=csv)                  # Fig. 6
     bench_kernel.run(csv=csv)                      # kernel microbench
-    bench_granularity.run(steps=steps, csv=csv)    # Fig. 7 / Table III
-    bench_qat_stages.run(steps=steps, csv=csv)     # Fig. 9
-    bench_variation.run(steps=steps, csv=csv)      # Fig. 10
-    bench_lm_cim.run(steps=max(20, steps // 3), csv=csv)  # beyond-paper LM
+    bench_conv_kernel.run(csv=csv)                 # fused conv deploy bench
+    if not args.smoke:
+        bench_granularity.run(steps=steps, csv=csv)   # Fig. 7 / Table III
+        bench_qat_stages.run(steps=steps, csv=csv)    # Fig. 9
+        bench_variation.run(steps=steps, csv=csv)     # Fig. 10
+        bench_lm_cim.run(steps=max(20, steps // 3), csv=csv)  # LM (beyond paper)
 
     print(f"\n== CSV summary ({time.time() - t0:.0f}s total) ==")
     for line in csv:

@@ -2,7 +2,7 @@
 for CIM accelerators, as composable JAX building blocks."""
 from .bitsplit import place_values, recombine, split_digits
 from .cim_conv import (calibrate_cim_conv, cim_conv2d, conv_dequant_muls,
-                       init_cim_conv)
+                       init_cim_conv, pack_deploy_conv)
 from .cim_linear import (CIMConfig, calibrate_cim, cim_linear, init_cim_linear,
                          pack_deploy)
 from .granularity import ArrayTiling, Granularity, conv_tiling, n_splits
@@ -15,5 +15,6 @@ __all__ = [
     "calibrate_cim", "cim_conv2d", "cim_linear", "conv_dequant_muls",
     "conv_tiling", "init_cim_conv", "init_cim_linear", "init_scale_from",
     "lsq_fake_quant", "lsq_integer", "n_splits", "pack_deploy",
-    "place_values", "qrange", "recombine", "round_ste", "split_digits",
+    "pack_deploy_conv", "place_values", "qrange", "recombine", "round_ste",
+    "split_digits",
 ]

@@ -20,6 +20,13 @@ indexing or im2col linear ops. Two ideas, both reproduced natively:
 
 Bit-splits are the leading axis of the grouped-conv weight batch, as in
 Fig. 5's "weight duplication".
+
+A third mode, ``deploy``, evaluates the same arithmetic through the fused
+Pallas conv kernel (kernels/cim_conv) from ``pack_deploy_conv``'s packed
+int digit planes: stretched-kernel patches are extracted once (no
+``n_split``x activation tiling) and ADC quantization happens per
+array-tile accumulator in VMEM — the grouped-conv path's HBM partial-sum
+round-trip disappears (DESIGN.md §3, §7).
 """
 from __future__ import annotations
 
@@ -111,13 +118,25 @@ def cim_conv2d(
     variation_key: Optional[jax.Array] = None,
     compute_dtype=jnp.bfloat16,
 ) -> jnp.ndarray:
-    """Conv2d through the CIM framework. Returns (B, H', W', C_out)."""
+    """Conv2d through the CIM framework. Returns (B, H', W', C_out).
+
+    Modes mirror ``cim_linear``: ``off`` is a plain conv, ``emulate`` the
+    paper-faithful QAT grouped-conv path, ``deploy`` packed-int inference
+    through the fused Pallas conv kernel (from ``pack_deploy_conv``
+    params) — bit-exact with emulate, but the partial-sum tensor never
+    reaches HBM and activations are not replicated ``n_split``x.
+    """
+    if cfg.enabled and cfg.mode == "deploy":
+        return _forward_conv_deploy(x, params, cfg, stride, padding,
+                                    variation_key, compute_dtype)
     kh, kw, c_in, c_out = params["w"].shape
     dn = ("NHWC", "HWIO", "NHWC")
     if not cfg.enabled or cfg.mode == "off":
         return jax.lax.conv_general_dilated(
             x.astype(compute_dtype), params["w"].astype(compute_dtype),
             (stride, stride), padding, dimension_numbers=dn)
+    if cfg.mode != "emulate":
+        raise ValueError(f"unknown CIM mode {cfg.mode!r}")
 
     t, c_per_array = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows,
                                  cfg.array_cols, cfg.weight_bits, cfg.cell_bits)
@@ -156,6 +175,9 @@ def cim_conv2d(
     psum = psum.reshape(b, ho, wo, n_split, k_tiles, c_out)  # per-array psums
 
     if cfg.psum_quant:
+        # psums are integer-valued (int x int MACs); snap float roundoff to
+        # the grid so ADC tie-breaking matches the deploy kernel bit-exactly
+        psum = psum + jax.lax.stop_gradient(jnp.round(psum) - psum)
         s_p = t.broadcast_psum_scale(params["s_p"])          # (S, kt, co)
         psum = lsq_fake_quant(psum, s_p[None, None, None], cfg.psum_bits,
                               signed=True)
@@ -167,6 +189,85 @@ def cim_conv2d(
     y = jnp.einsum("bhwstc,stc->bhwc", psum.astype(jnp.float32), deq)
     y = y * jnp.maximum(s_a, 1e-9)
     return y.astype(compute_dtype)
+
+
+def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
+                         variation_key, compute_dtype):
+    """Inference from packed conv digit planes (see pack_deploy_conv).
+
+    The conv geometry (kh, kw, c_per_array) is carried statically by the
+    6-D digit-plane shape, so packed params are self-describing under jit.
+    """
+    from repro.kernels import ops as kops  # lazy: avoids import cycle
+
+    d6 = params["w_digits"]              # (S, kt, kh, kw, cpa, C_out)
+    n_split, k_tiles, kh, kw, c_per_array, c_out = d6.shape
+    digits = d6.reshape(n_split, k_tiles, kh * kw * c_per_array, c_out)
+    if variation_key is not None and cfg.variation_std > 0:
+        digits = apply_cell_variation(
+            digits.astype(jnp.float32), variation_key, cfg.variation_std)
+
+    s_a = params["s_a"]
+    qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
+    a_int = jnp.clip(jnp.round(x.astype(jnp.float32) /
+                               jnp.maximum(s_a, 1e-9)), qn_a, qp_a)
+    if qn_a >= -128 and qp_a <= 127:
+        # integer codes fit int8: HBM traffic drops to 1 byte/activation
+        a_int = a_int.astype(jnp.int8)
+    elif qn_a >= 0 and qp_a <= 255:
+        a_int = a_int.astype(jnp.uint8)   # unsigned 8-bit (post-ReLU) codes
+
+    # logical geometry from the activation; must match the packed planes
+    c_in = x.shape[-1]
+    t, cpa = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                         cfg.weight_bits, cfg.cell_bits)
+    assert (t.k_tiles, cpa) == (k_tiles, c_per_array), (
+        f"packed digit planes {d6.shape} were built for a different "
+        f"geometry than x/cfg imply: expected (k_tiles, c_per_array)="
+        f"{(t.k_tiles, cpa)}, packed {(k_tiles, c_per_array)}")
+
+    s_p = t.broadcast_psum_scale(params["s_p"])              # (S, kt, co)
+    s_w = t.broadcast_weight_scale(params["s_w"])            # (kt, co)
+    places = place_values(cfg.weight_bits, cfg.cell_bits)    # (S,)
+    deq = places[:, None, None] * s_w[None] * jnp.maximum(s_a, 1e-9)
+
+    y = kops.cim_conv(
+        a_int, digits, s_p, deq,
+        kh=kh, kw=kw, stride=stride, padding=padding,
+        c_per_array=c_per_array,
+        psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
+        use_kernel=cfg.use_kernel,
+    )
+    return y.astype(compute_dtype)
+
+
+def pack_deploy_conv(params: Dict[str, jnp.ndarray],
+                     cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
+    """Convert trained emulate-mode conv params to the packed deploy form.
+
+    Digit planes are stored 6-D — (S, k_tiles, kh, kw, c_per_array, C_out)
+    — i.e. HWIO grouped by channel slice, row order (dh, dw, c) matching
+    ``ref.extract_conv_patches``. The shape carries the conv geometry, so
+    the deploy forward needs no side-channel metadata. pack_dtype='int4'
+    stores each plane as int4 (sign-magnitude digits of <=3-bit cells fit
+    [-7, 7]) — halves weight HBM vs int8."""
+    kh, kw, c_in, c_out = params["w"].shape
+    t, cpa = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                         cfg.weight_bits, cfg.cell_bits)
+    w_int = _quantize_conv_weight_int(params, cfg, t, cpa, kh, kw,
+                                      c_in, c_out)
+    digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
+    n_split = digits.shape[0]
+    c_pad = t.k_tiles * cpa - c_in
+    d = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, c_pad), (0, 0)))
+    d = d.reshape(n_split, kh, kw, t.k_tiles, cpa, c_out)
+    d = jnp.transpose(d, (0, 3, 1, 2, 4, 5))     # (S, kt, kh, kw, cpa, co)
+    return {
+        "w_digits": d.astype(cfg.store_dtype()),
+        "s_w": params["s_w"],
+        "s_p": params["s_p"],
+        "s_a": params["s_a"],
+    }
 
 
 def calibrate_cim_conv(x, params, cfg: CIMConfig, *, stride: int = 1,

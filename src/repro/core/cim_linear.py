@@ -63,6 +63,12 @@ class CIMConfig:
     def replace(self, **kw) -> "CIMConfig":
         return dataclasses.replace(self, **kw)
 
+    def store_dtype(self):
+        """Deploy digit-plane storage dtype: int4 when requested and the
+        sign-magnitude digits fit [-7, 7] (cells of <=3 bits), else int8."""
+        return (jnp.int4 if (self.pack_dtype == "int4"
+                             and self.cell_bits <= 3) else jnp.int8)
+
 
 # ---------------------------------------------------------------------------
 # parameter initialization
@@ -233,6 +239,12 @@ def _forward_deploy(x, params, cfg, variation_key, compute_dtype):
     qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
     a_int = jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(s_a, 1e-9)),
                      qn_a, qp_a)
+    if qn_a >= -128 and qp_a <= 127:
+        # integer codes fit int8: HBM traffic drops to 1 byte/activation
+        # (the byte width bench_kernel.traffic_model charges)
+        a_int = a_int.astype(jnp.int8)
+    elif qn_a >= 0 and qp_a <= 255:
+        a_int = a_int.astype(jnp.uint8)   # unsigned 8-bit (post-ReLU) codes
     # logical K from the activation; tiling geometry from the digit planes
     t = cfg.tiling(x.shape[-1], digits.shape[-1])
     assert t.k_tiles == digits.shape[1] and t.array_rows == digits.shape[2], \
@@ -266,9 +278,7 @@ def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig) -> Dict[str, jnp
     t = cfg.tiling(k, n)
     w_int = _quantize_weight_int(params, cfg, t)
     digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
-    store = jnp.int4 if (cfg.pack_dtype == "int4"
-                         and cfg.cell_bits <= 3) else jnp.int8
-    d_t = _tile_digits(digits, t).astype(store)
+    d_t = _tile_digits(digits, t).astype(cfg.store_dtype())
     out = {
         "w_digits": d_t,
         "s_w": params["s_w"],

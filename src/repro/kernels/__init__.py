@@ -1,7 +1,9 @@
-# Pallas TPU kernels for the paper's compute hot-spot: the fused
-# bit-split x array-tiled CIM matmul with in-VMEM partial-sum (ADC)
-# quantization. ops.py = jitted wrappers, ref.py = pure-jnp oracles.
+# Pallas TPU kernels for the paper's compute hot-spots: the fused
+# bit-split x array-tiled CIM matmul and the stretched-kernel CIM conv,
+# both with in-VMEM partial-sum (ADC) quantization. ops.py = jitted
+# wrappers, ref.py = pure-jnp oracles.
 from . import ops, ref
+from .cim_conv import cim_conv_pallas
 from .cim_matmul import cim_matmul_pallas
 
-__all__ = ["ops", "ref", "cim_matmul_pallas"]
+__all__ = ["ops", "ref", "cim_conv_pallas", "cim_matmul_pallas"]

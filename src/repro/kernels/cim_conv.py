@@ -1,0 +1,77 @@
+"""Fused Pallas deploy path for the CIM convolution (DESIGN.md §3).
+
+The paper's stretched-kernel tiling (§III-C, Fig. 5) makes each CIM
+array's MAC a convolution over a ``c_per_array`` channel slice with all
+``kh*kw`` taps resident in the array. The emulate path realizes this as
+one XLA grouped convolution, which costs two HBM round-trips the hardware
+never pays: the activation channel-slices are *tiled* ``n_split``x into
+the group axis, and the full (B, H', W', S, kt, C_out) partial-sum tensor
+is materialized before ADC quantization.
+
+The deploy path here removes both:
+
+  1. ``ref.extract_conv_patches`` gathers each output position's
+     receptive field ONCE per channel slice — (B, H', W', k_tiles, rows)
+     with rows = kh*kw*c_per_array, row order (dh, dw, c) matching
+     ``pack_deploy_conv``'s digit layout. No n_split replication: the
+     kernel re-reads the same patch block per bit-split via its BlockSpec
+     index map (the a-operand map ignores the split index).
+  2. The spatial axis flattens to M = B*H'*W' and lowers onto the fused
+     CIM matmul kernel, whose grid (M/bm, C_out/bn, k_tiles, n_split)
+     applies ADC quantization to each array-tile accumulator in VMEM —
+     the partial-sum tensor never touches HBM (DESIGN.md §7).
+
+VMEM working set per grid step is the linear kernel's (DESIGN.md §6);
+rows = kh*kw*c_per_array <= array_rows, so conv blocks are never larger
+than the linear blocks the budget was sized for.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .cim_matmul import cim_matmul_pallas
+from .ref import extract_conv_patches
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "c_per_array",
+                     "psum_bits", "psum_quant", "block_m", "block_n",
+                     "interpret"),
+)
+def cim_conv_pallas(
+    a_int: jnp.ndarray,    # (B, H, W, C_in) integer-valued codes
+    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out)
+    s_p: jnp.ndarray,      # (S, k_tiles, C_out)
+    deq: jnp.ndarray,      # (S, k_tiles, C_out)
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    padding: str,
+    c_per_array: int,
+    psum_bits: int,
+    psum_quant: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused CIM conv: stretched-kernel patches -> tiled matmul kernel.
+
+    Returns (B, H', W', C_out) float32.
+    """
+    n_split, k_tiles, rows, n = digits.shape
+    assert rows == kh * kw * c_per_array, (rows, kh, kw, c_per_array)
+    a_t = extract_conv_patches(a_int, kh, kw, stride, padding, k_tiles,
+                               c_per_array)
+    b, ho, wo = a_t.shape[:3]
+    out = cim_matmul_pallas(
+        a_t.reshape(b * ho * wo, k_tiles, rows),
+        digits, s_p, deq,
+        psum_bits=psum_bits, psum_quant=psum_quant,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return out.reshape(b, ho, wo, n)

@@ -9,7 +9,9 @@ VMEM here.
 
 Grid: (M/bm, N/bn, k_tiles, n_split); the two reduction dims (array tile
 t, bit-split s) iterate fastest so output-block revisits are consecutive
-and the accumulation stays resident.
+and the accumulation stays resident. The conv deploy path
+(kernels/cim_conv) lowers onto this same grid with M = B*H'*W' and
+rows = kh*kw*c_per_array (DESIGN.md §3).
 
 Block shapes (VMEM working set per step, bm=bn=128, rows=256, f32):
   a:      (bm, 1, rows)        128*256*4   = 128 KiB

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .cim_conv import cim_conv_pallas
 from .cim_matmul import cim_matmul_pallas
 
 
@@ -55,3 +56,52 @@ def cim_matmul(
             psum_bits=psum_bits, psum_quant=psum_quant,
         )
     return out.reshape(batch_shape + (digits.shape[-1],))
+
+
+def cim_conv(
+    a_int: jnp.ndarray,
+    digits: jnp.ndarray,
+    s_p: jnp.ndarray,
+    deq: jnp.ndarray,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding="SAME",
+    c_per_array: int,
+    psum_bits: int,
+    psum_quant: bool = True,
+    use_kernel: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """CIM conv over activation codes and packed conv digit planes.
+
+    a_int:  (B, H, W, C_in) integer-valued activation codes
+    digits: (S, k_tiles, kh*kw*c_per_array, C_out) cell planes in the
+            stretched-kernel row layout (see pack_deploy_conv)
+    s_p:    (S, k_tiles, C_out) ADC scales
+    deq:    (S, k_tiles, C_out) fused dequant scales
+    returns (B, H', W', C_out) float32
+    """
+    if digits.dtype == jnp.int4:
+        # int4 is the HBM storage dtype; the kernel loads via int8
+        digits = digits.astype(jnp.int8)
+    if not isinstance(padding, str):
+        # hashable for the jit static arg
+        padding = tuple((int(lo), int(hi)) for lo, hi in padding)
+    if use_kernel:
+        return cim_conv_pallas(
+            a_int, digits, s_p, deq,
+            kh=kh, kw=kw, stride=stride, padding=padding,
+            c_per_array=c_per_array,
+            psum_bits=psum_bits, psum_quant=psum_quant,
+            block_m=block_m, block_n=block_n,
+            interpret=not _on_tpu(),
+        )
+    return ref.cim_conv_ref(
+        a_int, digits, s_p, deq,
+        kh=kh, kw=kw, stride=stride, padding=padding,
+        c_per_array=c_per_array,
+        psum_bits=psum_bits, psum_quant=psum_quant,
+    )

@@ -5,6 +5,7 @@ shapes/dtypes and assert allclose against them.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -49,3 +50,79 @@ def cim_matmul_ref(
 def lsq_fake_quant_ref(x, s, qn: float, qp: float):
     s = jnp.maximum(s, 1e-9)
     return jnp.clip(jnp.round(x / s), qn, qp) * s
+
+
+def conv_pads(h: int, w: int, kh: int, kw: int, stride: int, padding):
+    """Resolve a conv padding spec to explicit ((lo,hi),(lo,hi)) pairs,
+    identical to what XLA's conv_general_dilated computes for the same
+    string — the deploy patch path must agree with the emulate conv."""
+    if isinstance(padding, str):
+        pads = jax.lax.padtype_to_pads((h, w), (kh, kw), (stride, stride),
+                                       padding.upper())
+        return tuple((int(lo), int(hi)) for lo, hi in pads)
+    return tuple((int(lo), int(hi)) for lo, hi in padding)
+
+
+def extract_conv_patches(
+    a: jnp.ndarray,        # (B, H, W, C)
+    kh: int, kw: int,
+    stride: int,
+    padding,
+    k_tiles: int,
+    c_per_array: int,
+) -> jnp.ndarray:
+    """Stretched-kernel patch extraction (paper §III-C, DESIGN.md §3).
+
+    Returns (B, H', W', k_tiles, kh*kw*c_per_array): for every output
+    position, tile t's row block holds exactly the activations its CIM
+    array's stretched kernels see, flattened tap-major (dh, dw, c). This
+    is NOT generic im2col — the contraction axis is tiled by the paper's
+    ``c_per_array = floor(rows / K^2)`` rule so channel slices never
+    straddle an array boundary. Channels are zero-padded to
+    ``k_tiles * c_per_array`` (matching the emulate path's padding).
+    """
+    b, h, w, c = a.shape
+    pads = conv_pads(h, w, kh, kw, stride, padding)
+    c_pad = k_tiles * c_per_array - c
+    a = jnp.pad(a, ((0, 0), pads[0], pads[1], (0, c_pad)))
+    hp = h + pads[0][0] + pads[0][1]
+    wp = w + pads[1][0] + pads[1][1]
+    ho = (hp - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    taps = []
+    for dh in range(kh):
+        for dw in range(kw):
+            taps.append(jax.lax.slice(
+                a, (0, dh, dw, 0),
+                (b, dh + (ho - 1) * stride + 1,
+                 dw + (wo - 1) * stride + 1, a.shape[3]),
+                (1, stride, stride, 1)))
+    p = jnp.stack(taps, axis=3)                     # (B,H',W',taps,kt*cpa)
+    p = p.reshape(b, ho, wo, kh * kw, k_tiles, c_per_array)
+    p = jnp.transpose(p, (0, 1, 2, 4, 3, 5))        # (B,H',W',kt,taps,cpa)
+    return p.reshape(b, ho, wo, k_tiles, kh * kw * c_per_array)
+
+
+def cim_conv_ref(
+    a_int: jnp.ndarray,    # (B, H, W, C_in) integer-valued codes
+    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out)
+    s_p: jnp.ndarray,      # (S, k_tiles, C_out)
+    deq: jnp.ndarray,      # (S, k_tiles, C_out)
+    *,
+    kh: int, kw: int,
+    stride: int,
+    padding,
+    c_per_array: int,
+    psum_bits: int,
+    psum_quant: bool = True,
+) -> jnp.ndarray:
+    """CIM conv oracle: stretched-kernel patches, then the matmul oracle
+    per output position. Returns (B, H', W', C_out) float32."""
+    k_tiles = digits.shape[1]
+    a_t = extract_conv_patches(a_int.astype(jnp.float32), kh, kw, stride,
+                               padding, k_tiles, c_per_array)
+    b, ho, wo = a_t.shape[:3]
+    out = cim_matmul_ref(
+        a_t.reshape(b * ho * wo, k_tiles, kh * kw * c_per_array),
+        digits, s_p, deq, psum_bits=psum_bits, psum_quant=psum_quant)
+    return out.reshape(b, ho, wo, digits.shape[-1])

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.nn.linear import apply_linear, linear_specs
-from repro.nn.module import ParamSpec, constrain
+from repro.nn.module import ParamSpec, constrain, shard_map
 
 NEG_INF = -1e30
 
@@ -24,6 +24,75 @@ def cdt(cfg: ModelConfig):
 
 def pdt(cfg: ModelConfig):
     return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# conv (CIM-aware entry point, mirrors nn.linear.apply_linear)
+# ---------------------------------------------------------------------------
+
+def conv_specs(
+    kh: int, kw: int, c_in: int, c_out: int,
+    *,
+    cim: Optional["CIMConfig"] = None,
+    out_axis: Optional[str] = None,
+    dtype=jnp.float32,
+) -> Dict[str, ParamSpec]:
+    """ParamSpecs for a CIM conv layer (HWIO weight + paper scale factors).
+
+    In deploy mode the weight exists ONLY as the packed 6-D digit planes
+    the fused Pallas conv kernel consumes (see pack_deploy_conv); emulate
+    keeps the float HWIO weight for QAT."""
+    from repro.core.granularity import conv_tiling
+
+    if cim is not None and cim.enabled and cim.mode == "deploy":
+        t, cpa = conv_tiling(kh, kw, c_in, c_out, cim.array_rows,
+                             cim.array_cols, cim.weight_bits, cim.cell_bits)
+        specs = {"w_digits": ParamSpec(
+            (t.n_split, t.k_tiles, kh, kw, cpa, c_out), cim.store_dtype(),
+            "zeros", (None, None, None, None, None, out_axis))}
+    else:
+        # He init over the full receptive field (kh*kw*c_in), matching
+        # init_cim_conv — ParamSpec's "fan_in" string would only see c_in
+        fan = kh * kw * c_in
+        he = lambda k, s, d: (jax.random.normal(k, s, jnp.float32)
+                              * jnp.sqrt(2.0 / fan)).astype(d)
+        specs = {"w": ParamSpec((kh, kw, c_in, c_out), dtype, he,
+                                (None, None, None, out_axis))}
+    if cim is not None and cim.enabled:
+        t, _ = conv_tiling(kh, kw, c_in, c_out, cim.array_rows,
+                           cim.array_cols, cim.weight_bits, cim.cell_bits)
+        wg = t.weight_scale_shape(cim.weight_granularity)
+        pg = t.psum_scale_shape(cim.psum_granularity)
+        specs["s_w"] = ParamSpec(wg, jnp.float32, "const:0.05",
+                                 (None, out_axis if wg[1] == c_out else None))
+        specs["s_p"] = ParamSpec(pg, jnp.float32, "const:8.0",
+                                 (None, None,
+                                  out_axis if pg[2] == c_out else None))
+        specs["s_a"] = ParamSpec((1,), jnp.float32, "ones", (None,))
+    return specs
+
+
+def apply_conv(
+    params: Dict,
+    x: jnp.ndarray,
+    cim: Optional["CIMConfig"] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    compute_dtype=jnp.bfloat16,
+    variation_key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Conv dispatch: plain XLA conv without CIM, else the CIM framework
+    (emulate grouped conv / fused Pallas deploy kernel)."""
+    if cim is None or not cim.enabled:
+        return jax.lax.conv_general_dilated(
+            x.astype(compute_dtype), params["w"].astype(compute_dtype),
+            (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    from repro.core.cim_conv import cim_conv2d
+    return cim_conv2d(x, params, cim, stride=stride, padding=padding,
+                      variation_key=variation_key,
+                      compute_dtype=compute_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -376,7 +445,7 @@ def _flash_decode_ep(q, k_new, v_new, kc, vc, idx, cfg: ModelConfig, mesh,
         return out, kcb, vcb, ksb, vsb
 
     if kv8:
-        out, kc2, vc2, ks2, vs2 = jax.shard_map(
+        out, kc2, vc2, ks2, vs2 = shard_map(
             local, mesh=mesh,
             in_specs=(P(batch), P(batch), P(batch),
                       P(batch, "model"), P(batch, "model"), P(batch),
@@ -394,7 +463,7 @@ def _flash_decode_ep(q, k_new, v_new, kc, vc, idx, cfg: ModelConfig, mesh,
                                     None, None, None, None)
         return o, kcb2, vcb2
 
-    out, kc2, vc2 = jax.shard_map(
+    out, kc2, vc2 = shard_map(
         local_bf16, mesh=mesh,
         in_specs=(P(batch), P(batch), P(batch),
                   P(batch, "model"), P(batch, "model"), P(batch)),
@@ -721,7 +790,7 @@ def _apply_moe_ep(p: Dict, x: jnp.ndarray, cfg: ModelConfig, mesh):
              if kk.startswith(("wg_", "wu_", "wd_"))} if cfg.cim.enabled else {}
     espec = {kk: P("model") for kk in extra}
     xf = x.reshape(b * t, d)
-    y = jax.shard_map(
+    y = shard_map(
         local_moe, mesh=mesh,
         in_specs=(P(batch, None), P(), P("model"), P("model"), P("model"),
                   espec),

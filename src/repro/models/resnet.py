@@ -15,7 +15,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cim_conv import cim_conv2d, init_cim_conv
+from repro.core.cim_conv import cim_conv2d, init_cim_conv, pack_deploy_conv
 from repro.core.cim_linear import CIMConfig
 
 
@@ -92,6 +92,24 @@ def init(key: jax.Array, cfg: ResNetConfig):
         "b": jnp.zeros((cfg.n_classes,), jnp.float32),
     }
     return params, state
+
+
+def pack_deploy(params: Dict, cfg: ResNetConfig) -> Dict:
+    """Convert a trained (emulate-mode) ResNet param tree to the packed
+    conv deploy form: every CIM conv becomes int digit planes for the
+    fused Pallas kernel; the full-precision stem, BN and FC pass through.
+    Run ``forward`` with ``cfg.cim.mode == "deploy"`` afterwards."""
+    out: Dict = {}
+    for name, val in params.items():
+        if name in ("stem", "fc") or name.endswith("_bn"):
+            out[name] = val
+            continue
+        blk = {}
+        for k, v in val.items():
+            blk[k] = (pack_deploy_conv(v, cfg.cim)
+                      if k in ("conv1", "conv2", "proj") else v)
+        out[name] = blk
+    return out
 
 
 def forward(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig,

@@ -31,11 +31,9 @@ def linear_specs(
     if cim is not None and cim.enabled and cim.mode == "deploy":
         # packed-int inference: weights live ONLY as digit planes
         t = cim.tiling(k, n)
-        store = jnp.int4 if (cim.pack_dtype == "int4"
-                             and cim.cell_bits <= 3) else jnp.int8
         specs = {"w_digits": ParamSpec(
-            (t.n_split, t.k_tiles, t.array_rows, n), store, "zeros",
-            (None, None, None, out_axis))}
+            (t.n_split, t.k_tiles, t.array_rows, n), cim.store_dtype(),
+            "zeros", (None, None, None, out_axis))}
     else:
         specs = {"w": ParamSpec((k, n), dtype, w_init, (in_axis, out_axis))}
     if cim is not None and cim.enabled:

@@ -1,7 +1,7 @@
 """Bit-split decomposition properties (paper Fig. 5)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bitsplit import place_values, recombine, split_digits
 from repro.core.granularity import n_splits

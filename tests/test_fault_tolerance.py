@@ -94,6 +94,7 @@ def test_compressed_gradient_sync_shard_map():
     """int8 reduce-scatter/all-gather gradient sync inside shard_map is
     close to the exact mean, and error feedback captures the residual."""
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.nn.module import shard_map
     from repro.train.grad_compress import (compressed_psum_tree,
                                            init_error_feedback)
 
@@ -102,7 +103,7 @@ def test_compressed_gradient_sync_shard_map():
          "b": jax.random.normal(jax.random.PRNGKey(1), (17,))}
     ef = init_error_feedback(g)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(compressed_psum_tree, axis_name="data"),
         mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
         check_vma=False)   # error-feedback output is device-local state
