@@ -1,0 +1,154 @@
+"""Analytic per-layer hardware cost model -> bench_hw_cost.json.
+
+Walks every CIM conv of the benchmark ResNet (the paper's Table II
+geometry at this repo's scaled-down shapes) and charges energy / latency
+/ area from the array tiling — no training, no RNG, fully deterministic,
+which is why the JSON artifact is checked in at the repo root (see
+benchmarks/README.md for the schema and the regeneration command).
+
+Cost model (constants below; pJ / ns / um^2):
+
+  MAC        E_MAC per used cell per output position
+  DAC        E_DAC_BIT per input element bit (inputs are driven once per
+             output position, shared across splits/columns of an array)
+  ADC        E_ADC(b) = ADC_E_LIN*b + ADC_E_EXP*4^b per conversion, the
+             standard SAR-ADC energy scaling; conversions = one per
+             (position, split, k_tile, output column)
+  shift+add  E_SA per conversion entering the shift-and-add tree
+  dequant    E_DQ per (position, split, k_tile): the fused column scale
+             2^{cs}*s_w*s_a is one multiply per partial-sum word
+  latency    (LAT_PER_BIT*psum_bits + LAT_BASE) ns per output position
+             (ADC readout serializes the column mux; arrays in parallel)
+  area       A_CELL per cell + A_ADC(b) = ADC_A_LIN*b + ADC_A_EXP*2^b
+             per column, times 128 columns, times n_arrays
+
+  PYTHONPATH=src python -m benchmarks.bench_hw_cost [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.granularity import Granularity as G, conv_tiling
+from repro.models import resnet
+
+from .common import HW, WIDTHS, make_cim, resnet_cfg
+
+# energy (pJ)
+E_MAC = 0.25e-3            # per used cell per output position
+E_DAC_BIT = 1.7e-3         # per input element bit
+ADC_E_LIN = 2.0e-3         # * psum_bits per conversion
+ADC_E_EXP = 0.1e-3         # * 4^psum_bits per conversion
+E_SA = 0.3e-3              # per conversion
+E_DQ = 25.2e-3             # per (position, split, k_tile)
+# latency (ns per output position)
+LAT_PER_BIT = 4.0
+LAT_BASE = 3.0
+# area (um^2)
+A_CELL = 0.05              # per cell
+ADC_A_LIN = 3.75           # * psum_bits per column
+ADC_A_EXP = 0.25           # * 2^psum_bits per column
+
+PSUM_BITS = (2, 4, 6, 8)
+
+
+def _bench_conv_layers():
+    """(name, kh, c_in, c_out, m_out) for every CIM conv of the bench
+    ResNet-20 (stem/fc stay full precision), batch=1. Layer identity
+    (names, strides, proj placement) comes from
+    ``resnet.conv_layer_names`` — the single source ``forward`` and the
+    robustness harness share — only channels/spatial extents are derived
+    here."""
+    cfg = resnet_cfg(make_cim(G.COLUMN, G.COLUMN))
+    layers = []
+    for name, stride in resnet.conv_layer_names(cfg):
+        blk, conv = name.split(".")
+        si, bi = int(blk[1]), int(blk[3])
+        w = WIDTHS[si]
+        prev = WIDTHS[si - 1] if (bi == 0 and si > 0) else w
+        kh = 1 if conv == "proj" else 3
+        c_in = w if conv == "conv2" else prev
+        hw_out = HW >> si          # one stride-2 downsample per stage > 0
+        layers.append((name, kh, c_in, w, hw_out * hw_out))
+    return layers
+
+
+def layer_cost(name, kh, c_in, c_out, m_out, cim):
+    """Charge one conv layer under the stretched-kernel tiling."""
+    t, cpa = conv_tiling(kh, kh, c_in, c_out, cim.array_rows, cim.array_cols,
+                         cim.weight_bits, cim.cell_bits)
+    ns, kt, nt = t.n_split, t.k_tiles, t.n_tiles
+    n_arrays = kt * nt
+    taps = kh * kh
+    pb = cim.psum_bits
+    cells_used = taps * c_in * c_out * ns
+    cells_total = n_arrays * t.array_rows * t.array_cols
+    conversions = m_out * ns * kt * c_out
+
+    e_mac = m_out * cells_used * E_MAC
+    e_dac = m_out * c_in * taps * cim.act_bits * E_DAC_BIT
+    e_adc = conversions * (ADC_E_LIN * pb + ADC_E_EXP * 4 ** pb)
+    e_sa = conversions * E_SA
+    e_dq = m_out * ns * kt * E_DQ
+    energy = e_mac + e_dac + e_adc + e_sa + e_dq
+    latency = m_out * (LAT_PER_BIT * pb + LAT_BASE)
+    area = n_arrays * (t.array_rows * t.array_cols * A_CELL
+                       + t.array_cols * (ADC_A_LIN * pb + ADC_A_EXP * 2 ** pb))
+    return {
+        "name": name, "kind": "conv",
+        "n_split": ns, "k_tiles": kt, "n_tiles": nt, "n_arrays": n_arrays,
+        "array_rows": t.array_rows, "array_cols": t.array_cols,
+        "cells_used": cells_used, "cells_total": cells_total,
+        "utilization": cells_used / cells_total,
+        "m_out": m_out, "conversions": conversions,
+        "e_mac_pj": e_mac, "e_dac_pj": e_dac, "e_adc_pj": e_adc,
+        "e_shift_add_pj": e_sa, "e_dequant_pj": e_dq,
+        "latency_ns": latency, "area_um2": area, "energy_pj": energy,
+        "adc_energy_fraction": e_adc / energy,
+    }
+
+
+def run(csv=None, out=None):
+    """Paper Fig. 6/11 cost axis: ADC (psum) resolution vs energy/area."""
+    report = {}
+    for pb in PSUM_BITS:
+        cim = make_cim(G.COLUMN, G.COLUMN, psum_bits=pb)
+        layers = [layer_cost(*spec, cim) for spec in _bench_conv_layers()]
+        tot = {k: sum(L[k] for L in layers)
+               for k in ("n_arrays", "cells_used", "cells_total",
+                         "conversions", "energy_pj", "e_adc_pj",
+                         "latency_ns", "area_um2")}
+        tot["n_layers"] = len(layers)
+        tot["utilization"] = tot["cells_used"] / tot["cells_total"]
+        tot["adc_energy_fraction"] = tot["e_adc_pj"] / tot["energy_pj"]
+        tot = {"n_layers": tot.pop("n_layers"), **tot}
+        report[f"psum_bits={pb}"] = {
+            "model": "resnet20-bench", "batch": 1, "psum_bits": pb,
+            "weight_bits": cim.weight_bits, "cell_bits": cim.cell_bits,
+            "act_bits": cim.act_bits,
+            "array": [cim.array_rows, cim.array_cols],
+            "layers": layers, "totals": tot,
+        }
+        line = (f"hw_cost,psum_bits={pb},energy_pj={tot['energy_pj']:.1f},"
+                f"adc_frac={tot['adc_energy_fraction']:.3f},"
+                f"latency_ns={tot['latency_ns']:.0f},"
+                f"area_um2={tot['area_um2']:.0f}")
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench_hw_cost.json")
+    args = ap.parse_args(argv)
+    run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,44 +1,92 @@
 """Paper Fig. 10: inference accuracy under log-normal memory-cell variation
-across quantization schemes. Validates the robustness ordering: models with
-column-wise scales degrade more gracefully."""
+across quantization schemes — run as a Monte-Carlo sweep **on the fused
+Pallas deploy kernels** (``repro.eval.robustness``), the configuration that
+would actually ship, not the n_split-replicated emulate fallback.
+
+For each scheme: short QAT, pack to int digit planes once, then an
+N-sample sigma-grid accuracy/logit-error sweep (lazy per-sample noise, no
+re-packing, one jitted step for the whole grid). The column/column scheme
+additionally prints per-layer error attribution: which layers' columns
+absorb the conductance drift and which let it through.
+
+Validates the robustness ordering: models with column-wise scales degrade
+more gracefully."""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import numpy as np
 
 from repro.core.granularity import Granularity as G
+from repro.eval import robustness
+from repro.models import resnet
 
-from .common import _data, evaluate, make_cim, resnet_cfg, train_qat
+from .common import _data, make_cim, resnet_cfg, train_qat
 
 SIGMAS = (0.0, 0.1, 0.2, 0.3, 0.4)
+N_SAMPLES = 4
+ATTRIB_SIGMA = 0.3
 
 
-def run(steps=150, seed=0, csv=None):
+def run(steps=150, seed=0, csv=None, n_samples=N_SAMPLES, n_eval=256):
     data = _data(seed)
     schemes = [
         ("layer/layer", G.LAYER, G.LAYER),
         ("layer/column (Saxena'23)", G.LAYER, G.COLUMN),
         ("column/column (ours)", G.COLUMN, G.COLUMN),
     ]
-    print("\n== Fig.10: accuracy vs cell-variation sigma ==")
+    print("\n== Fig.10: Monte-Carlo accuracy vs cell-variation sigma "
+          "(deploy kernels) ==")
     (xtr, ytr), (xte, yte) = data
+    xte, yte = xte[:n_eval], yte[:n_eval]
+    key = jax.random.PRNGKey(7)
     out = {}
+    attrib_target = None          # (name, packed, state, dcfg) of "ours"
     for name, gw, gp in schemes:
-        r = train_qat(make_cim(gw, gp), steps=steps, seed=seed, data=data)
-        accs = []
-        for sigma in SIGMAS:
-            cfg = resnet_cfg(make_cim(gw, gp, variation_std=sigma))
-            acc = evaluate(r["params"], r["state"], cfg, xte, yte,
-                           variation_key=(jax.random.PRNGKey(7)
-                                          if sigma > 0 else None))
-            accs.append(acc)
-        out[name] = accs
+        cim = make_cim(gw, gp)
+        r = train_qat(cim, steps=steps, seed=seed, data=data)
+        # pack once; every MC sample is a lazy perturbation of these planes
+        cfg_e = resnet_cfg(cim)
+        packed = resnet.pack_deploy(r["params"], cfg_e)
+        dcfg = dataclasses.replace(cfg_e, cim=cim.replace(mode="deploy"))
+        sweep = robustness.monte_carlo_resnet(
+            packed, r["state"], dcfg, xte, yte,
+            key=key, sigmas=SIGMAS, n_samples=n_samples)
+        out[name] = sweep
+        if gw == G.COLUMN and gp == G.COLUMN:
+            attrib_target = (name, packed, r["state"], dcfg)
         line = ("variation," + name + ","
-                + ",".join(f"s{int(s*10)}={a:.3f}"
-                           for s, a in zip(SIGMAS, accs)))
+                + ",".join(f"s{int(s * 10)}={m:.3f}±{sd:.3f}"
+                           for s, m, sd in zip(SIGMAS, sweep.acc_mean,
+                                               sweep.acc_std)))
         print(line)
+        err_line = ("variation_err," + name + ","
+                    + ",".join(f"s{int(s * 10)}={e:.3f}"
+                               for s, e in zip(SIGMAS, sweep.logit_err_mean)))
+        print(err_line)
         if csv is not None:
             csv.append(line)
+            csv.append(err_line)
+
+    # per-layer attribution for the paper's scheme at a mid-grid sigma
+    assert attrib_target is not None, \
+        "schemes must include the (COLUMN, COLUMN) entry for attribution"
+    name, packed, state, dcfg = attrib_target
+    print(f"\n-- per-layer attribution, {name}, sigma={ATTRIB_SIGMA} --")
+    attrib = robustness.per_layer_attribution(
+        packed, state, dcfg, jax.numpy.asarray(xte[:64]),
+        key=key, sigma=ATTRIB_SIGMA)
+    worst = sorted(attrib, key=lambda a: -a.rel_err)[:5]
+    for a in attrib:
+        flag = " <- worst" if a in worst[:1] else ""
+        print(f"  {a.name:12s} rel_err={a.rel_err:.3f} "
+              f"median_col={a.median_col_err:.3f} "
+              f"worst_col=#{a.worst_col}({a.worst_col_err:.3f}){flag}")
+    if csv is not None:
+        for a in worst:
+            csv.append(f"variation_layer,{a.name},rel={a.rel_err:.3f},"
+                       f"worst_col={a.worst_col}:{a.worst_col_err:.3f}")
     return out
 
 

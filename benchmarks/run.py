@@ -26,19 +26,21 @@ def main(argv=None) -> None:
     steps = 30 if args.fast else args.steps
 
     from . import (bench_conv_kernel, bench_dequant_overhead,
-                   bench_granularity, bench_kernel, bench_lm_cim,
-                   bench_psum_range, bench_qat_stages, bench_variation)
+                   bench_granularity, bench_hw_cost, bench_kernel,
+                   bench_lm_cim, bench_psum_range, bench_qat_stages,
+                   bench_variation)
 
     csv = []
     t0 = time.time()
     bench_dequant_overhead.run(csv=csv)            # Fig. 8 (analytic)
     bench_psum_range.run(csv=csv)                  # Fig. 6
+    bench_hw_cost.run(csv=csv)                     # analytic HW cost model
     bench_kernel.run(csv=csv)                      # kernel microbench
     bench_conv_kernel.run(csv=csv)                 # fused conv deploy bench
     if not args.smoke:
         bench_granularity.run(steps=steps, csv=csv)   # Fig. 7 / Table III
         bench_qat_stages.run(steps=steps, csv=csv)    # Fig. 9
-        bench_variation.run(steps=steps, csv=csv)     # Fig. 10
+        bench_variation.run(steps=steps, csv=csv)     # Fig. 10 (MC deploy)
         bench_lm_cim.run(steps=max(20, steps // 3), csv=csv)  # LM (beyond paper)
 
     print(f"\n== CSV summary ({time.time() - t0:.0f}s total) ==")

@@ -1,6 +1,6 @@
 """deepseek-v3-671b [moe] — arXiv:2412.19437. 61L d_model=7168 128H MLA,
 expert d_ff=2048 vocab=129280, MoE 256 experts top-8 + 1 shared, 3 leading
-dense layers (d_ff=18432). MTP head omitted (DESIGN.md §8)."""
+dense layers (d_ff=18432). MTP head omitted (next-token head only)."""
 from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
 
 

@@ -33,9 +33,9 @@ def get_config(arch: str, *, reduced: bool = False,
 
 
 def cell_status(arch: str, shape_name: str) -> Tuple[bool, str]:
-    """(runnable, reason). Skips per DESIGN.md §5: long_500k only for
-    sub-quadratic families; whisper (enc-dec, 448/1500-position model)
-    skips long_500k."""
+    """(runnable, reason). Skips: long_500k only for sub-quadratic
+    families; whisper (enc-dec, 448/1500-position model) skips
+    long_500k."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     if shape.name == "long_500k":

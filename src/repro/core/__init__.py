@@ -8,13 +8,14 @@ from .cim_linear import (CIMConfig, calibrate_cim, cim_linear, init_cim_linear,
 from .granularity import ArrayTiling, Granularity, conv_tiling, n_splits
 from .quantizer import (init_scale_from, lsq_fake_quant, lsq_integer, qrange,
                         round_ste)
-from .variation import apply_cell_variation
+from .variation import (apply_cell_variation, perturb_digits, perturb_packed,
+                        variation_noise)
 
 __all__ = [
     "ArrayTiling", "CIMConfig", "Granularity", "apply_cell_variation",
     "calibrate_cim", "cim_conv2d", "cim_linear", "conv_dequant_muls",
     "conv_tiling", "init_cim_conv", "init_cim_linear", "init_scale_from",
     "lsq_fake_quant", "lsq_integer", "n_splits", "pack_deploy",
-    "pack_deploy_conv", "place_values", "qrange", "recombine", "round_ste",
-    "split_digits",
+    "pack_deploy_conv", "perturb_digits", "perturb_packed", "place_values",
+    "qrange", "recombine", "round_ste", "split_digits", "variation_noise",
 ]

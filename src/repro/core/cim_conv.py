@@ -39,7 +39,7 @@ from .bitsplit import place_values, split_digits
 from .cim_linear import CIMConfig, _quantize_act
 from .granularity import Granularity, conv_tiling
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
-from .variation import apply_cell_variation
+from .variation import perturb_packed, variation_noise, variation_wanted
 
 
 def init_cim_conv(
@@ -116,6 +116,7 @@ def cim_conv2d(
     stride: int = 1,
     padding: str = "SAME",
     variation_key: Optional[jax.Array] = None,
+    variation_std=None,
     compute_dtype=jnp.bfloat16,
 ) -> jnp.ndarray:
     """Conv2d through the CIM framework. Returns (B, H', W', C_out).
@@ -125,10 +126,16 @@ def cim_conv2d(
     through the fused Pallas conv kernel (from ``pack_deploy_conv``
     params) — bit-exact with emulate, but the partial-sum tensor never
     reaches HBM and activations are not replicated ``n_split``x.
+
+    ``variation_key``/``variation_std`` evaluate one Monte-Carlo device
+    realization; noise is drawn in the packed 6-D layout on both modes,
+    so emulate and deploy agree bit-exactly under a shared key
+    (``variation_std=None`` falls back to ``cfg.variation_std``).
     """
+    sigma = cfg.variation_std if variation_std is None else variation_std
     if cfg.enabled and cfg.mode == "deploy":
         return _forward_conv_deploy(x, params, cfg, stride, padding,
-                                    variation_key, compute_dtype)
+                                    variation_key, sigma, compute_dtype)
     kh, kw, c_in, c_out = params["w"].shape
     dn = ("NHWC", "HWIO", "NHWC")
     if not cfg.enabled or cfg.mode == "off":
@@ -146,8 +153,6 @@ def cim_conv2d(
     w_int = _quantize_conv_weight_int(params, cfg, t, c_per_array,
                                       kh, kw, c_in, c_out)
     digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)  # (S,kh,kw,ci,co)
-    if variation_key is not None and cfg.variation_std > 0:
-        digits = apply_cell_variation(digits, variation_key, cfg.variation_std)
     n_split = digits.shape[0]
 
     # --- group-conv framework -------------------------------------------------
@@ -159,6 +164,14 @@ def cim_conv2d(
     # weights: (S, kh, kw, kt*cpa, co) -> grouped HWIO (kh, kw, cpa, S*kt*co)
     # group g in [0, S*kt): split s = g // kt, tile t = g % kt
     d_g = d_p.reshape(n_split, kh, kw, k_tiles, c_per_array, c_out)
+    if variation_wanted(variation_key, sigma):
+        # noise is drawn in the canonical PACKED layout (S, kt, kh, kw,
+        # cpa, co) — the shape pack_deploy_conv stores — then transposed
+        # into this path's grouping, so deploy sees identical theta per cell
+        noise = variation_noise(
+            variation_key, (n_split, k_tiles, kh, kw, c_per_array, c_out),
+            sigma)
+        d_g = d_g * jnp.transpose(noise, (0, 2, 3, 1, 4, 5))
     d_g = jnp.transpose(d_g, (1, 2, 4, 0, 3, 5))             # kh,kw,cpa,S,kt,co
     d_g = d_g.reshape(kh, kw, c_per_array, n_split * k_tiles * c_out)
 
@@ -192,20 +205,22 @@ def cim_conv2d(
 
 
 def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
-                         variation_key, compute_dtype):
+                         variation_key, sigma, compute_dtype):
     """Inference from packed conv digit planes (see pack_deploy_conv).
 
     The conv geometry (kh, kw, c_per_array) is carried statically by the
     6-D digit-plane shape, so packed params are self-describing under jit.
+    Cell noise is injected by the kernel wrapper on the flattened packed
+    planes (row-major identical to the 6-D layout) — the int planes are
+    never re-packed per Monte-Carlo sample.
     """
     from repro.kernels import ops as kops  # lazy: avoids import cycle
 
     d6 = params["w_digits"]              # (S, kt, kh, kw, cpa, C_out)
     n_split, k_tiles, kh, kw, c_per_array, c_out = d6.shape
     digits = d6.reshape(n_split, k_tiles, kh * kw * c_per_array, c_out)
-    if variation_key is not None and cfg.variation_std > 0:
-        digits = apply_cell_variation(
-            digits.astype(jnp.float32), variation_key, cfg.variation_std)
+    if not variation_wanted(variation_key, sigma):
+        variation_key = sigma = None
 
     s_a = params["s_a"]
     qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
@@ -237,12 +252,14 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
         c_per_array=c_per_array,
         psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
         use_kernel=cfg.use_kernel,
+        variation_key=variation_key, variation_std=sigma,
     )
     return y.astype(compute_dtype)
 
 
-def pack_deploy_conv(params: Dict[str, jnp.ndarray],
-                     cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
+def pack_deploy_conv(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
+                     variation_key: Optional[jax.Array] = None,
+                     variation_std=None) -> Dict[str, jnp.ndarray]:
     """Convert trained emulate-mode conv params to the packed deploy form.
 
     Digit planes are stored 6-D — (S, k_tiles, kh, kw, c_per_array, C_out)
@@ -250,7 +267,12 @@ def pack_deploy_conv(params: Dict[str, jnp.ndarray],
     ``ref.extract_conv_patches``. The shape carries the conv geometry, so
     the deploy forward needs no side-channel metadata. pack_dtype='int4'
     stores each plane as int4 (sign-magnitude digits of <=3-bit cells fit
-    [-7, 7]) — halves weight HBM vs int8."""
+    [-7, 7]) — halves weight HBM vs int8.
+
+    ``variation_key``/``variation_std`` bake ONE log-normal device
+    realization into the planes (float32); for Monte-Carlo sweeps keep
+    the planes clean and use ``perturb_packed``/the forward's
+    ``variation_key`` instead (no re-packing per sample)."""
     kh, kw, c_in, c_out = params["w"].shape
     t, cpa = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
                          cfg.weight_bits, cfg.cell_bits)
@@ -262,12 +284,15 @@ def pack_deploy_conv(params: Dict[str, jnp.ndarray],
     d = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, c_pad), (0, 0)))
     d = d.reshape(n_split, kh, kw, t.k_tiles, cpa, c_out)
     d = jnp.transpose(d, (0, 3, 1, 2, 4, 5))     # (S, kt, kh, kw, cpa, co)
-    return {
+    out = {
         "w_digits": d.astype(cfg.store_dtype()),
         "s_w": params["s_w"],
         "s_p": params["s_p"],
         "s_a": params["s_a"],
     }
+    if variation_wanted(variation_key, variation_std):
+        out = perturb_packed(out, variation_key, variation_std)
+    return out
 
 
 def calibrate_cim_conv(x, params, cfg: CIMConfig, *, stride: int = 1,

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from .bitsplit import place_values, split_digits
 from .granularity import ArrayTiling, Granularity
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
-from .variation import apply_cell_variation
+from .variation import perturb_digits, perturb_packed, variation_wanted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,31 +180,45 @@ def cim_linear(
     cfg: CIMConfig,
     *,
     variation_key: Optional[jax.Array] = None,
+    variation_std=None,
     compute_dtype=jnp.bfloat16,
 ) -> jnp.ndarray:
-    """Apply a CIM linear layer: x (..., K) @ w (K, N) -> (..., N)."""
+    """Apply a CIM linear layer: x (..., K) @ w (K, N) -> (..., N).
+
+    ``variation_std`` overrides ``cfg.variation_std`` without rebuilding
+    the (static) config — it may be a traced scalar, so a Monte-Carlo
+    sweep can feed a sigma grid through one jitted function. Emulate and
+    deploy draw cell noise in the same packed layout from the same key,
+    so they agree bit-exactly under variation too (DESIGN.md §8).
+    """
     if not cfg.enabled or cfg.mode == "off":
         w = params["w"].astype(compute_dtype)
         return jnp.dot(x.astype(compute_dtype), w)
+    sigma = cfg.variation_std if variation_std is None else variation_std
     if cfg.mode == "emulate":
-        return _forward_emulate(x, params, cfg, variation_key, compute_dtype)
+        return _forward_emulate(x, params, cfg, variation_key, sigma,
+                                compute_dtype)
     if cfg.mode == "deploy":
-        return _forward_deploy(x, params, cfg, variation_key, compute_dtype)
+        return _forward_deploy(x, params, cfg, variation_key, sigma,
+                               compute_dtype)
     raise ValueError(f"unknown CIM mode {cfg.mode!r}")
 
 
-def _forward_emulate(x, params, cfg, variation_key, compute_dtype):
+def _forward_emulate(x, params, cfg, variation_key, sigma, compute_dtype):
     k, n = params["w"].shape
     t = cfg.tiling(k, n)
 
     a_int, s_a = _quantize_act(x, params, cfg)                # (..., K)
     w_int = _quantize_weight_int(params, cfg, t)              # (K, N)
     digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)  # (S,K,N)
-    if variation_key is not None and cfg.variation_std > 0:
-        digits = apply_cell_variation(digits, variation_key, cfg.variation_std)
 
     a_t = _tile_inputs(a_int, t).astype(compute_dtype)        # (..., kt, r)
-    d_t = _tile_digits(digits, t).astype(compute_dtype)       # (S, kt, r, N)
+    d_t = _tile_digits(digits, t)                             # (S, kt, r, N)
+    if variation_wanted(variation_key, sigma):
+        # noise is drawn over the TILED layout — the same (S, kt, rows, N)
+        # shape pack_deploy stores — so deploy sees identical theta per cell
+        d_t = perturb_digits(d_t, variation_key, sigma)
+    d_t = d_t.astype(compute_dtype)
 
     # integer column MACs: one per (split, array-tile, column)
     psum = jnp.einsum("...tr,strn->...stn", a_t, d_t,
@@ -226,14 +240,15 @@ def _forward_emulate(x, params, cfg, variation_key, compute_dtype):
     return y.astype(compute_dtype)
 
 
-def _forward_deploy(x, params, cfg, variation_key, compute_dtype):
-    """Inference from packed int digit planes (see pack_deploy)."""
+def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
+    """Inference from packed int digit planes (see pack_deploy). Cell
+    noise is injected by the kernel wrapper on the packed planes — the
+    int planes themselves are never re-packed per sample."""
     from repro.kernels import ops as kops  # lazy: avoids import cycle
 
     digits = params["w_digits"]                               # int (S,kt,r,N)
-    if variation_key is not None and cfg.variation_std > 0:
-        digits = apply_cell_variation(
-            digits.astype(jnp.float32), variation_key, cfg.variation_std)
+    if not variation_wanted(variation_key, sigma):
+        variation_key = sigma = None
 
     s_a = params["s_a"]
     qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
@@ -260,6 +275,7 @@ def _forward_deploy(x, params, cfg, variation_key, compute_dtype):
         a_t, digits, s_p, deq,
         psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
         use_kernel=cfg.use_kernel,
+        variation_key=variation_key, variation_std=sigma,
     )
     return y.astype(compute_dtype)
 
@@ -268,12 +284,20 @@ def _forward_deploy(x, params, cfg, variation_key, compute_dtype):
 # packing + calibration
 # ---------------------------------------------------------------------------
 
-def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
+def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
+                variation_key: Optional[jax.Array] = None,
+                variation_std=None) -> Dict[str, jnp.ndarray]:
     """Convert trained emulate-mode params into the packed deploy form.
 
     pack_dtype='int4' stores each digit plane as int4 (sign-magnitude
     digits of <=3-bit cells fit [-7, 7]) — halves weight HBM vs int8 and
-    is the deploy dtype the decode roofline uses."""
+    is the deploy dtype the decode roofline uses.
+
+    ``variation_key``/``variation_std`` bake ONE log-normal device
+    realization into the packed planes (float32) — useful to freeze a
+    specific chip's noise. For Monte-Carlo sweeps keep the planes clean
+    and perturb lazily per sample instead: ``perturb_packed(packed, key,
+    sigma, sample=i)`` or the ``variation_key`` forward argument."""
     k, n = params["w"].shape
     t = cfg.tiling(k, n)
     w_int = _quantize_weight_int(params, cfg, t)
@@ -286,6 +310,8 @@ def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig) -> Dict[str, jnp
         "s_a": params["s_a"],
         "k_logical": jnp.asarray(k, jnp.int32),
     }
+    if variation_wanted(variation_key, variation_std):
+        out = perturb_packed(out, variation_key, variation_std)
     return out
 
 

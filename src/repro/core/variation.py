@@ -1,21 +1,97 @@
 """Memory-cell variation model (paper §IV-E, Eq. 5).
 
 Device non-idealities are modeled as multiplicative log-normal noise on the
-stored cell conductances: w_var = w * exp(theta), theta ~ N(0, sigma^2).
+stored cell conductances: d_var = d * exp(theta), theta ~ N(0, sigma^2).
 The noise is applied to the *bit-split cell values* (each physical cell
 drifts independently), which is where real RRAM variation acts.
+
+Bit-exactness contract (DESIGN.md §8): noise is always drawn in the
+**packed digit-plane layout** — ``(S, k_tiles, rows, N)`` for linear,
+``(S, k_tiles, kh, kw, c_per_array, C_out)`` for conv — because that is
+the one layout both execution paths share: the deploy path stores digit
+planes packed, and the emulate path tiles/groups its digits into the same
+element order before the MAC. Drawing ``jax.random.normal`` over the
+packed shape therefore assigns *the same theta to the same physical cell*
+on both paths, which is what makes deploy and emulate agree bit-exactly
+under a shared ``variation_key``. (``jax.random.normal`` fills row-major,
+so the flattened conv layout ``(S, kt, kh*kw*cpa, C_out)`` draws identical
+values to the 6-D packed layout.)
+
+``sigma`` may be a Python float or a traced JAX scalar. Tracing sigma lets
+a Monte-Carlo sweep jit one evaluation function and feed the whole sigma
+grid as data — no recompile per noise level. The zero-noise fast path
+(skip the normal draw entirely) applies only when sigma is a *static*
+Python number <= 0 or the key is None.
 """
 from __future__ import annotations
+
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+Sigma = Union[float, jnp.ndarray]
+
+
+def is_static_zero(sigma: Optional[Sigma]) -> bool:
+    """True when sigma is statically known to disable variation."""
+    return sigma is None or (isinstance(sigma, (int, float)) and sigma <= 0.0)
+
+
+def variation_wanted(key: Optional[jax.Array], sigma: Optional[Sigma]) -> bool:
+    """The single trace-time gate both paths use: noise is injected iff a
+    key is given and sigma is not statically zero."""
+    return key is not None and not is_static_zero(sigma)
+
+
+def variation_noise(key: jax.Array, shape, sigma: Sigma) -> jnp.ndarray:
+    """Multiplicative log-normal factor exp(sigma * N(0, 1)), float32."""
+    theta = jax.random.normal(key, shape, dtype=jnp.float32)
+    return jnp.exp(jnp.asarray(sigma, jnp.float32) * theta)
+
 
 def apply_cell_variation(
-    digits: jnp.ndarray, key: jax.Array, sigma: float
+    digits: jnp.ndarray, key: jax.Array, sigma: Sigma
 ) -> jnp.ndarray:
     """Perturb cell values: d -> d * exp(theta), theta ~ N(0, sigma)."""
-    if sigma <= 0.0:
+    if is_static_zero(sigma):
         return digits
-    theta = sigma * jax.random.normal(key, digits.shape, dtype=jnp.float32)
-    return (digits.astype(jnp.float32) * jnp.exp(theta)).astype(digits.dtype)
+    noisy = digits.astype(jnp.float32) * variation_noise(key, digits.shape,
+                                                         sigma)
+    return noisy.astype(digits.dtype)
+
+
+def perturb_digits(digits: jnp.ndarray, key: jax.Array,
+                   sigma: Sigma) -> jnp.ndarray:
+    """Perturb digit planes *in their packed layout*; returns float32.
+
+    Unlike ``apply_cell_variation`` this never casts back to the input
+    dtype: noisy conductances are not integers, and rounding them back to
+    int8/int4 storage would quantize the very non-ideality being modeled.
+    The deploy kernels accept float digit operands (they upcast to f32 in
+    VMEM regardless).
+    """
+    if is_static_zero(sigma):
+        return digits.astype(jnp.float32)
+    return digits.astype(jnp.float32) * variation_noise(key, digits.shape,
+                                                        sigma)
+
+
+def perturb_packed(packed: Dict[str, jnp.ndarray], key: jax.Array,
+                   sigma: Sigma, *, sample: Optional[int] = None
+                   ) -> Dict[str, jnp.ndarray]:
+    """One Monte-Carlo device realization of packed deploy params.
+
+    Returns a new packed dict whose ``w_digits`` planes carry log-normal
+    conductance noise (float32); scales and metadata pass through, and the
+    int planes are never re-packed — sampling N devices costs N cheap
+    elementwise perturbations of the same packed tensor. ``sample`` folds
+    a Monte-Carlo sample index into ``key`` (``jax.random.fold_in``), so a
+    sweep is keyed by one base key + sample number. Works for linear
+    (4-D) and conv (6-D) packed planes alike.
+    """
+    if sample is not None:
+        key = jax.random.fold_in(key, sample)
+    out = dict(packed)
+    out["w_digits"] = perturb_digits(packed["w_digits"], key, sigma)
+    return out

@@ -1,0 +1,14 @@
+"""Evaluation harnesses: scenario sweeps over the deploy kernels.
+
+``repro.eval.robustness`` is the Monte-Carlo cell-variation subsystem
+(paper §IV-E / Fig. 10): sigma-grid sweeps of accuracy and partial-sum
+error on the fused Pallas deploy path, with per-layer error attribution.
+"""
+from .robustness import (LayerAttribution, RobustnessSweep,
+                         monte_carlo_linear_error, monte_carlo_resnet,
+                         per_layer_attribution)
+
+__all__ = [
+    "LayerAttribution", "RobustnessSweep", "monte_carlo_linear_error",
+    "monte_carlo_resnet", "per_layer_attribution",
+]

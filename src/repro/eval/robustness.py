@@ -1,0 +1,223 @@
+"""Monte-Carlo cell-variation robustness harness (paper §IV-E, Fig. 10).
+
+Runs N-sample sigma-grid sweeps of accuracy and output error **on the
+fused Pallas deploy kernels** — the configuration that would actually
+ship — not the n_split-replicated emulate fallback. Three design points
+keep the sweep at kernel speed:
+
+* the packed int digit planes are built ONCE; each Monte-Carlo sample is
+  a lazy log-normal perturbation keyed by ``fold_in(key, sample)``
+  (``core.variation.perturb_packed`` semantics — no re-packing);
+* ``sigma`` is fed as a *traced* scalar, so one jitted evaluation step
+  serves the entire sigma grid with zero recompiles;
+* samples share device realizations across sigma levels (common random
+  numbers): sample i draws the same theta field at every sigma, so the
+  sigma-monotonicity of the error curve is not drowned by sampling noise.
+
+Per-layer attribution re-evaluates each CIM conv in isolation — clean
+input taps from ``resnet.forward(return_taps=True)``, noise keyed by the
+same ``resnet.variation_keys`` split the end-to-end forward consumes — so
+"which columns' scale factors absorb the drift" is answered with exactly
+the noise the full network saw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cim_conv import cim_conv2d
+from repro.core.cim_linear import CIMConfig, cim_linear
+from repro.models import resnet
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RobustnessSweep:
+    """Monte-Carlo sweep result: axis 0 indexes sigmas, axis 1 samples."""
+    sigmas: Tuple[float, ...]
+    n_samples: int
+    acc: np.ndarray            # (n_sigma, n_samples) top-1 accuracy
+    logit_err: np.ndarray      # (n_sigma, n_samples) rel logits error
+    acc_clean: float           # no-noise deploy accuracy
+
+    @property
+    def acc_mean(self) -> np.ndarray:
+        return self.acc.mean(axis=1)
+
+    @property
+    def acc_std(self) -> np.ndarray:
+        return self.acc.std(axis=1)
+
+    @property
+    def logit_err_mean(self) -> np.ndarray:
+        return self.logit_err.mean(axis=1)
+
+
+@dataclasses.dataclass
+class LayerAttribution:
+    """Layer-local error under the end-to-end noise realization."""
+    name: str
+    rel_err: float             # ||y_noisy - y_clean|| / ||y_clean||
+    col_err: np.ndarray        # (C_out,) per-output-column relative error
+    worst_col: int
+    worst_col_err: float
+    median_col_err: float
+
+
+# ---------------------------------------------------------------------------
+# linear-layer sweep (psum/output error; the statistical-test workhorse)
+# ---------------------------------------------------------------------------
+
+def monte_carlo_linear_error(
+    packed: Dict[str, jnp.ndarray],
+    cfg: CIMConfig,
+    x: jnp.ndarray,
+    *,
+    key: jax.Array,
+    sigmas: Sequence[float],
+    n_samples: int = 8,
+) -> np.ndarray:
+    """Relative deploy-output error per (sigma, sample), vs the clean
+    deploy output. ``packed`` comes from ``pack_deploy``; the evaluation
+    runs the deploy path of ``cim_linear`` (Pallas kernel when
+    ``cfg.use_kernel``). Returns (n_sigma, n_samples) float64."""
+    dcfg = cfg.replace(mode="deploy")
+
+    @jax.jit
+    def _eval(k, sigma):
+        return cim_linear(x, packed, dcfg, variation_key=k,
+                          variation_std=sigma, compute_dtype=jnp.float32)
+
+    y_clean = cim_linear(x, packed, dcfg, compute_dtype=jnp.float32)
+    denom = float(jnp.linalg.norm(y_clean)) + 1e-12
+    out = np.zeros((len(sigmas), n_samples))
+    for i in range(n_samples):
+        k_i = jax.random.fold_in(key, i)
+        for si, sigma in enumerate(sigmas):
+            if sigma <= 0.0:
+                continue
+            y = _eval(k_i, jnp.float32(sigma))
+            out[si, i] = float(jnp.linalg.norm(y - y_clean)) / denom
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full-model Monte-Carlo accuracy sweep
+# ---------------------------------------------------------------------------
+
+def monte_carlo_resnet(
+    params: Dict,
+    state: Dict,
+    cfg: "resnet.ResNetConfig",
+    x,
+    y,
+    *,
+    key: jax.Array,
+    sigmas: Sequence[float] = (0.0, 0.1, 0.2, 0.3, 0.4),
+    n_samples: int = 4,
+    batch: int = 128,
+) -> RobustnessSweep:
+    """Sigma-grid Monte-Carlo accuracy/logit-error sweep of a (packed,
+    deploy-mode) ResNet. ``params`` is the ``resnet.pack_deploy`` tree and
+    ``cfg.cim.mode`` should be "deploy" so the sweep exercises the fused
+    Pallas kernels; the same call also accepts emulate params/cfg for
+    cross-path comparisons."""
+
+    @jax.jit
+    def _logits(xb, k, sigma):
+        lg, _ = resnet.forward(params, state, xb, cfg, train=False,
+                               variation_key=k, variation_std=sigma)
+        return lg
+
+    @jax.jit
+    def _logits_clean(xb):
+        lg, _ = resnet.forward(params, state, xb, cfg, train=False)
+        return lg
+
+    n = len(x)
+    xb_list = [jnp.asarray(x[i:i + batch]) for i in range(0, n, batch)]
+    yb_list = [np.asarray(y[i:i + batch]) for i in range(0, n, batch)]
+    clean = [_logits_clean(xb) for xb in xb_list]
+    acc_clean = sum(int((np.asarray(jnp.argmax(lg, -1)) == yb).sum())
+                    for lg, yb in zip(clean, yb_list)) / n
+    clean_sq = sum(float(jnp.sum(lg.astype(jnp.float32) ** 2))
+                   for lg in clean)
+
+    acc = np.zeros((len(sigmas), n_samples))
+    err = np.zeros((len(sigmas), n_samples))
+    for i in range(n_samples):
+        k_i = jax.random.fold_in(key, i)
+        for si, sigma in enumerate(sigmas):
+            if sigma <= 0.0:
+                acc[si, i] = acc_clean
+                continue
+            correct, diff_sq = 0, 0.0
+            for xb, yb, lg_c in zip(xb_list, yb_list, clean):
+                lg = _logits(xb, k_i, jnp.float32(sigma))
+                correct += int((np.asarray(jnp.argmax(lg, -1)) == yb).sum())
+                diff_sq += float(jnp.sum(
+                    (lg.astype(jnp.float32) - lg_c.astype(jnp.float32)) ** 2))
+            acc[si, i] = correct / n
+            err[si, i] = np.sqrt(diff_sq) / (np.sqrt(clean_sq) + 1e-12)
+    return RobustnessSweep(sigmas=tuple(float(s) for s in sigmas),
+                           n_samples=n_samples, acc=acc, logit_err=err,
+                           acc_clean=acc_clean)
+
+
+# ---------------------------------------------------------------------------
+# per-layer error attribution
+# ---------------------------------------------------------------------------
+
+def per_layer_attribution(
+    params: Dict,
+    state: Dict,
+    cfg: "resnet.ResNetConfig",
+    x: jnp.ndarray,
+    *,
+    key: jax.Array,
+    sigma: float,
+    sample: int = 0,
+) -> Tuple[LayerAttribution, ...]:
+    """Layer-local variation error under the SAME noise the end-to-end
+    forward draws for Monte-Carlo sample ``sample``.
+
+    Each CIM conv is re-evaluated in isolation on its clean input tap,
+    with and without its per-layer noise key, so a layer's entry reflects
+    the drift its own arrays inject — not error inherited from upstream.
+    The per-column breakdown shows which output columns' scale factors
+    absorb the drift (small ``col_err``) and which let it through."""
+    _, _, taps = resnet.forward(params, state, x, cfg, train=False,
+                                return_taps=True)
+    k_sample = jax.random.fold_in(key, sample)
+    vkeys = resnet.variation_keys(k_sample, cfg)
+    out = []
+    for lname, stride in resnet.conv_layer_names(cfg):
+        blk, conv = lname.split(".")
+        node = params[blk][conv]
+        tap = taps[lname]
+        y_clean = cim_conv2d(tap, node, cfg.cim, stride=stride,
+                             compute_dtype=jnp.float32)
+        y_noisy = cim_conv2d(tap, node, cfg.cim, stride=stride,
+                             variation_key=vkeys[lname],
+                             variation_std=jnp.float32(sigma),
+                             compute_dtype=jnp.float32)
+        diff = (y_noisy - y_clean).astype(jnp.float32)
+        denom = jnp.linalg.norm(y_clean) + 1e-12
+        rel = float(jnp.linalg.norm(diff) / denom)
+        col_norm = jnp.sqrt(jnp.sum(y_clean.astype(jnp.float32) ** 2,
+                                    axis=(0, 1, 2))) + 1e-12
+        col_err = np.asarray(
+            jnp.sqrt(jnp.sum(diff ** 2, axis=(0, 1, 2))) / col_norm)
+        worst = int(np.argmax(col_err))
+        out.append(LayerAttribution(
+            name=lname, rel_err=rel, col_err=col_err, worst_col=worst,
+            worst_col_err=float(col_err[worst]),
+            median_col_err=float(np.median(col_err))))
+    return tuple(out)

@@ -10,6 +10,12 @@ is materialized before ADC quantization.
 
 The deploy path here removes both:
 
+(Cell variation rides the same lowering: ``variation_key``/
+``variation_std`` pass through to the matmul kernel, which perturbs the
+flattened digit planes (S, kt, kh*kw*cpa, C_out) — row-major identical to
+the packed 6-D conv layout, so conv deploy and conv emulate draw the same
+per-cell noise from a shared key; DESIGN.md §8.)
+
   1. ``ref.extract_conv_patches`` gathers each output position's
      receptive field ONCE per channel slice — (B, H', W', k_tiles, rows)
      with rows = kh*kw*c_per_array, row order (dh, dw, c) matching
@@ -47,6 +53,8 @@ def cim_conv_pallas(
     digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out)
     s_p: jnp.ndarray,      # (S, k_tiles, C_out)
     deq: jnp.ndarray,      # (S, k_tiles, C_out)
+    variation_key=None,    # optional PRNG key: one MC device realization
+    variation_std=None,    # log-normal sigma (float or traced scalar)
     *,
     kh: int,
     kw: int,
@@ -70,7 +78,7 @@ def cim_conv_pallas(
     b, ho, wo = a_t.shape[:3]
     out = cim_matmul_pallas(
         a_t.reshape(b * ho * wo, k_tiles, rows),
-        digits, s_p, deq,
+        digits, s_p, deq, variation_key, variation_std,
         psum_bits=psum_bits, psum_quant=psum_quant,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )

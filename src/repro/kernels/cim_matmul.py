@@ -4,14 +4,24 @@ TPU-native realization of the paper's array pipeline (DESIGN.md §2): the
 CIM array boundary becomes the K-grid dimension of a tiled matmul, and the
 ADC's per-column quantization is applied to each array-tile's accumulator
 *in VMEM* before cross-array shift-and-add — the (M, S, kt, N) partial-sum
-tensor that the pure-JAX emulate path materializes in HBM never leaves
-VMEM here.
+tensor never exists in HBM on this path (the emulate path still
+materializes it, deliberately, so LSQ gradients can flow through the ADC).
 
 Grid: (M/bm, N/bn, k_tiles, n_split); the two reduction dims (array tile
 t, bit-split s) iterate fastest so output-block revisits are consecutive
 and the accumulation stays resident. The conv deploy path
 (kernels/cim_conv) lowers onto this same grid with M = B*H'*W' and
 rows = kh*kw*c_per_array (DESIGN.md §3).
+
+Cell variation (DESIGN.md §8): ``variation_key``/``variation_std`` make
+the kernel evaluate one Monte-Carlo device realization — the digit
+operand is multiplied by log-normal noise drawn over its *unpadded
+packed* shape (S, k_tiles, rows, N) before the pallas_call, so the same
+``jax.random`` stream perturbs the same physical cell as on the emulate
+path (that is the bit-exactness contract; in-kernel pltpu PRNG could not
+reproduce ``jax.random.normal`` draws). The psum-in-VMEM fusion is
+unchanged; the digit operand streams as float32 instead of int8 for the
+duration of the noisy evaluation.
 
 Block shapes (VMEM working set per step, bm=bn=128, rows=256, f32):
   a:      (bm, 1, rows)        128*256*4   = 128 KiB
@@ -27,6 +37,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.variation import perturb_digits, variation_wanted
 
 
 def _kernel(a_ref, d_ref, sp_ref, deq_ref, o_ref, *, psum_bits: int,
@@ -66,6 +78,8 @@ def cim_matmul_pallas(
     digits: jnp.ndarray,   # (S, k_tiles, rows, N)
     s_p: jnp.ndarray,      # (S, k_tiles, N)
     deq: jnp.ndarray,      # (S, k_tiles, N)
+    variation_key=None,    # optional PRNG key: one MC device realization
+    variation_std=None,    # log-normal sigma (float or traced scalar)
     *,
     psum_bits: int,
     psum_quant: bool = True,
@@ -73,6 +87,10 @@ def cim_matmul_pallas(
     block_n: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    if variation_wanted(variation_key, variation_std):
+        # perturb BEFORE block padding: noise indices must match the
+        # packed (unpadded) layout the emulate path perturbs (§8)
+        digits = perturb_digits(digits, variation_key, variation_std)
     m, k_tiles, rows = a_t.shape
     n_split = digits.shape[0]
     n = digits.shape[-1]

@@ -3,11 +3,20 @@
 ``use_kernel=True`` runs the Pallas kernel (interpret mode off-TPU so the
 kernel body is validated on CPU); ``use_kernel=False`` runs the pure-jnp
 oracle — used for allocation-free dry-runs where the HLO must be portable.
+
+Both wrappers accept ``variation_key``/``variation_std``: when set, the
+digit planes are evaluated under one Monte-Carlo realization of log-normal
+cell noise (paper §IV-E). The kernel path draws the noise inside
+``cim_matmul_pallas`` (before block padding); the oracle path perturbs
+here with the same ``repro.core.variation.perturb_digits``, so kernel and
+oracle stay bit-comparable under a shared key (DESIGN.md §8).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.variation import perturb_digits, variation_wanted
 
 from . import ref
 from .cim_conv import cim_conv_pallas
@@ -29,6 +38,8 @@ def cim_matmul(
     use_kernel: bool = True,
     block_m: int = 128,
     block_n: int = 128,
+    variation_key=None,
+    variation_std=None,
 ) -> jnp.ndarray:
     """CIM matmul over pre-tiled inputs.
 
@@ -36,6 +47,7 @@ def cim_matmul(
     digits: (S, k_tiles, rows, N) int8 cell planes
     s_p:    (S, k_tiles, N) ADC scales
     deq:    (S, k_tiles, N) fused dequant scales (2^{cs} * s_w * s_a)
+    variation_key/std: optional log-normal cell-noise realization
     returns (..., N) float32
     """
     batch_shape = a_t.shape[:-2]
@@ -45,12 +57,14 @@ def cim_matmul(
     a2 = a_t.reshape((m,) + a_t.shape[-2:])
     if use_kernel:
         out = cim_matmul_pallas(
-            a2, digits, s_p, deq,
+            a2, digits, s_p, deq, variation_key, variation_std,
             psum_bits=psum_bits, psum_quant=psum_quant,
             block_m=block_m, block_n=block_n,
             interpret=not _on_tpu(),
         )
     else:
+        if variation_wanted(variation_key, variation_std):
+            digits = perturb_digits(digits, variation_key, variation_std)
         out = ref.cim_matmul_ref(
             a2, digits, s_p, deq,
             psum_bits=psum_bits, psum_quant=psum_quant,
@@ -74,6 +88,8 @@ def cim_conv(
     use_kernel: bool = True,
     block_m: int = 128,
     block_n: int = 128,
+    variation_key=None,
+    variation_std=None,
 ) -> jnp.ndarray:
     """CIM conv over activation codes and packed conv digit planes.
 
@@ -82,6 +98,7 @@ def cim_conv(
             stretched-kernel row layout (see pack_deploy_conv)
     s_p:    (S, k_tiles, C_out) ADC scales
     deq:    (S, k_tiles, C_out) fused dequant scales
+    variation_key/std: optional log-normal cell-noise realization
     returns (B, H', W', C_out) float32
     """
     if digits.dtype == jnp.int4:
@@ -92,13 +109,15 @@ def cim_conv(
         padding = tuple((int(lo), int(hi)) for lo, hi in padding)
     if use_kernel:
         return cim_conv_pallas(
-            a_int, digits, s_p, deq,
+            a_int, digits, s_p, deq, variation_key, variation_std,
             kh=kh, kw=kw, stride=stride, padding=padding,
             c_per_array=c_per_array,
             psum_bits=psum_bits, psum_quant=psum_quant,
             block_m=block_m, block_n=block_n,
             interpret=not _on_tpu(),
         )
+    if variation_wanted(variation_key, variation_std):
+        digits = perturb_digits(digits, variation_key, variation_std)
     return ref.cim_conv_ref(
         a_int, digits, s_p, deq,
         kh=kh, kw=kw, stride=stride, padding=padding,

@@ -81,9 +81,12 @@ def apply_conv(
     padding: str = "SAME",
     compute_dtype=jnp.bfloat16,
     variation_key: Optional[jax.Array] = None,
+    variation_std=None,
 ) -> jnp.ndarray:
     """Conv dispatch: plain XLA conv without CIM, else the CIM framework
-    (emulate grouped conv / fused Pallas deploy kernel)."""
+    (emulate grouped conv / fused Pallas deploy kernel). The variation
+    knobs evaluate one Monte-Carlo cell-noise realization; emulate and
+    deploy agree bit-exactly under a shared key (DESIGN.md §8)."""
     if cim is None or not cim.enabled:
         return jax.lax.conv_general_dilated(
             x.astype(compute_dtype), params["w"].astype(compute_dtype),
@@ -92,6 +95,7 @@ def apply_conv(
     from repro.core.cim_conv import cim_conv2d
     return cim_conv2d(x, params, cim, stride=stride, padding=padding,
                       variation_key=variation_key,
+                      variation_std=variation_std,
                       compute_dtype=compute_dtype)
 
 

@@ -3,7 +3,7 @@ train/prefill (matmul-friendly, O(L) memory in chunks) and an O(1)-state
 recurrent decode step. Used standalone and inside the zamba2 hybrid.
 
 The SSD state update itself is an activation-activation op (no stored
-weight) so it is not CIM-mapped (DESIGN.md §5); the in/out projections are
+weight) so it is not CIM-mapped (DESIGN.md §1); the in/out projections are
 CIM-quantized linears like every other stored-weight matmul.
 """
 from __future__ import annotations

@@ -112,41 +112,90 @@ def pack_deploy(params: Dict, cfg: ResNetConfig) -> Dict:
     return out
 
 
+def conv_layer_names(cfg: ResNetConfig) -> Tuple[Tuple[str, int], ...]:
+    """Ordered (layer_name, stride) pairs for every CIM conv in forward
+    order — "s0b1.conv2", "s1b0.proj", ... The single source of layer
+    identity shared by ``variation_keys``, ``forward(return_taps=True)``
+    and the robustness harness's per-layer attribution."""
+    widths = cfg.widths if cfg.depth == 20 else (64, 128, 256, 512)
+    nb = cfg.blocks_per_stage
+    out = []
+    c_in = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(nb):
+            name = f"s{si}b{bi}"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            out.append((f"{name}.conv1", stride))
+            out.append((f"{name}.conv2", 1))
+            if stride != 1 or c_in != w:
+                out.append((f"{name}.proj", stride))
+            c_in = w
+    return tuple(out)
+
+
+def variation_keys(key: Optional[jax.Array], cfg: ResNetConfig
+                   ) -> Optional[Dict[str, jax.Array]]:
+    """Per-layer variation keys, {layer_name: key}. ``forward`` consumes
+    exactly these, so per-layer re-evaluation (error attribution) sees the
+    same device noise as the end-to-end forward pass."""
+    if key is None:
+        return None
+    names = [n for n, _ in conv_layer_names(cfg)]
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
 def forward(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig,
-            *, train: bool, variation_key: Optional[jax.Array] = None
-            ) -> Tuple[jnp.ndarray, Dict]:
-    """x: (B, H, W, 3) -> (logits, new_bn_state)."""
+            *, train: bool, variation_key: Optional[jax.Array] = None,
+            variation_std=None, return_taps: bool = False):
+    """x: (B, H, W, 3) -> (logits, new_bn_state).
+
+    ``variation_key``/``variation_std`` evaluate one Monte-Carlo cell-
+    noise realization (per-layer keys from ``variation_keys``; std may be
+    a traced scalar so sigma sweeps don't recompile). With
+    ``return_taps=True`` also returns {layer_name: conv input activation}
+    — the hook the robustness harness uses for per-layer attribution.
+    """
     widths = cfg.widths if cfg.depth == 20 else (64, 128, 256, 512)
     nb = cfg.blocks_per_stage
     new_state: Dict = {}
+    taps: Dict[str, jnp.ndarray] = {}
     fp = cfg.cim.replace(enabled=False)
     h = cim_conv2d(x, params["stem"], fp, compute_dtype=jnp.float32)
     h, new_state["stem_bn"] = _bn_apply(params["stem_bn"], state["stem_bn"],
                                         h, train, cfg.bn_momentum)
     h = jax.nn.relu(h)
-    vk = variation_key
+    vkeys = variation_keys(variation_key, cfg) or {}
     for si, w in enumerate(widths):
         for bi in range(nb):
             name = f"s{si}b{bi}"
             blk, bst = params[name], state[name]
             nst: Dict = {}
             stride = 2 if (bi == 0 and si > 0) else 1
-            if vk is not None:
-                vk, k1, k2, k3 = jax.random.split(vk, 4)
-            else:
-                k1 = k2 = k3 = None
+            if return_taps:
+                taps[f"{name}.conv1"] = h
             y = cim_conv2d(h, blk["conv1"], cfg.cim, stride=stride,
-                           variation_key=k1, compute_dtype=jnp.float32)
+                           variation_key=vkeys.get(f"{name}.conv1"),
+                           variation_std=variation_std,
+                           compute_dtype=jnp.float32)
             y, nst["bn1"] = _bn_apply(blk["bn1"], bst["bn1"], y, train,
                                       cfg.bn_momentum)
             y = jax.nn.relu(y)
-            y = cim_conv2d(y, blk["conv2"], cfg.cim, variation_key=k2,
+            if return_taps:
+                taps[f"{name}.conv2"] = y
+            y = cim_conv2d(y, blk["conv2"], cfg.cim,
+                           variation_key=vkeys.get(f"{name}.conv2"),
+                           variation_std=variation_std,
                            compute_dtype=jnp.float32)
             y, nst["bn2"] = _bn_apply(blk["bn2"], bst["bn2"], y, train,
                                       cfg.bn_momentum)
             if "proj" in blk:
+                if return_taps:
+                    taps[f"{name}.proj"] = h
                 sc = cim_conv2d(h, blk["proj"], cfg.cim, stride=stride,
-                                variation_key=k3, compute_dtype=jnp.float32)
+                                variation_key=vkeys.get(f"{name}.proj"),
+                                variation_std=variation_std,
+                                compute_dtype=jnp.float32)
                 sc, nst["bn_p"] = _bn_apply(blk["bn_p"], bst["bn_p"], sc,
                                             train, cfg.bn_momentum)
             else:
@@ -155,6 +204,8 @@ def forward(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig,
             new_state[name] = nst
     h = jnp.mean(h, axis=(1, 2))
     logits = h @ params["fc"]["w"] + params["fc"]["b"]
+    if return_taps:
+        return logits, new_state, taps
     return logits, new_state
 
 

@@ -57,9 +57,11 @@ def apply_linear(
     *,
     compute_dtype=jnp.bfloat16,
     variation_key: Optional[jax.Array] = None,
+    variation_std=None,
 ) -> jnp.ndarray:
     if cim is None or not cim.enabled:
         return jnp.dot(x.astype(compute_dtype),
                        params["w"].astype(compute_dtype))
     return cim_linear(x, params, cim, variation_key=variation_key,
+                      variation_std=variation_std,
                       compute_dtype=compute_dtype)

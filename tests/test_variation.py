@@ -1,0 +1,236 @@
+"""Deploy-vs-emulate equivalence under cell variation (DESIGN.md §8).
+
+The contract: noise is drawn in the packed digit-plane layout on both
+paths, so identical (variation_key, variation_std) must give bit-exact
+(1e-4 in f32, same as the noise-free contract) outputs across linear and
+conv, strides/paddings, int8/int4 packing — and sigma=0/None must take
+the no-op fast path. Plus the statistical property the Monte-Carlo
+harness rests on: psum error grows monotonically with sigma.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CIMConfig, Granularity, calibrate_cim,
+                        calibrate_cim_conv, cim_conv2d, cim_linear,
+                        init_cim_conv, init_cim_linear, pack_deploy,
+                        pack_deploy_conv, perturb_packed)
+from repro.core.variation import variation_wanted
+from repro.eval import robustness
+
+
+def _lin_cfg(**kw):
+    base = dict(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=4, array_rows=32, array_cols=32)
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def _lin_setup(cfg, k=70, n=24, b=8, seed=0):
+    p = init_cim_linear(jax.random.PRNGKey(seed), k, n, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, k)) * 0.5
+    return calibrate_cim(x, p, cfg), x
+
+
+def _conv_cfg(**kw):
+    base = dict(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=6, array_rows=64, array_cols=64,
+                act_signed=False)
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def _conv_setup(cfg, kh=3, c_in=19, c_out=10, b=2, hw=8, stride=1,
+                padding="SAME", seed=0):
+    p = init_cim_conv(jax.random.PRNGKey(seed), kh, kh, c_in, c_out, cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                      (b, hw, hw, c_in)))
+    return calibrate_cim_conv(x, p, cfg, stride=stride, padding=padding), x
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness under a shared key
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wb_cb", [(4, 2), (3, 1)])
+@pytest.mark.parametrize("sigma", [0.1, 0.3])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_linear_deploy_matches_emulate_under_variation(wb_cb, sigma,
+                                                       use_kernel):
+    wb, cb = wb_cb
+    cfg = _lin_cfg(weight_bits=wb, cell_bits=cb)
+    p, x = _lin_setup(cfg)
+    vk = jax.random.PRNGKey(42)
+    y_em = cim_linear(x, p, cfg, variation_key=vk, variation_std=sigma,
+                      compute_dtype=jnp.float32)
+    pd = pack_deploy(p, cfg)
+    y_dep = cim_linear(x, pd, cfg.replace(mode="deploy",
+                                          use_kernel=use_kernel),
+                       variation_key=vk, variation_std=sigma,
+                       compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_dep), np.asarray(y_em),
+                               rtol=1e-4, atol=1e-4)
+    # and the noise actually did something
+    y_clean = cim_linear(x, p, cfg, compute_dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(y_em - y_clean))) > 0
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "VALID")])
+@pytest.mark.parametrize("pack_dtype", ["int8", "int4"])
+def test_conv_deploy_matches_emulate_under_variation(stride, padding,
+                                                     pack_dtype):
+    cfg = _conv_cfg(pack_dtype=pack_dtype)
+    p, x = _conv_setup(cfg, stride=stride, padding=padding)
+    vk = jax.random.PRNGKey(7)
+    y_em = cim_conv2d(x, p, cfg, stride=stride, padding=padding,
+                      variation_key=vk, variation_std=0.2,
+                      compute_dtype=jnp.float32)
+    dp = pack_deploy_conv(p, cfg)
+    y_dep = cim_conv2d(x, dp, cfg.replace(mode="deploy"), stride=stride,
+                       padding=padding, variation_key=vk, variation_std=0.2,
+                       compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_dep), np.asarray(y_em),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_variation_std_falls_back_to_cfg():
+    """The cfg knob and the argument override are the same scenario axis."""
+    cfg = _conv_cfg(variation_std=0.2)
+    p, x = _conv_setup(cfg)
+    vk = jax.random.PRNGKey(3)
+    y_cfg = cim_conv2d(x, p, cfg, variation_key=vk,
+                       compute_dtype=jnp.float32)
+    y_arg = cim_conv2d(x, p, cfg.replace(variation_std=0.0),
+                       variation_key=vk, variation_std=0.2,
+                       compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_cfg), np.asarray(y_arg))
+
+
+def test_sigma_zero_is_noop_fast_path():
+    """Static sigma<=0 (or key=None) must skip noise entirely — outputs
+    bitwise equal to the clean forward, int planes untouched."""
+    assert not variation_wanted(jax.random.PRNGKey(0), 0.0)
+    assert not variation_wanted(jax.random.PRNGKey(0), None)
+    assert not variation_wanted(None, 0.5)
+    assert variation_wanted(jax.random.PRNGKey(0), 0.5)
+
+    cfg = _conv_cfg()
+    p, x = _conv_setup(cfg)
+    dp = pack_deploy_conv(p, cfg)
+    dcfg = cfg.replace(mode="deploy")
+    y_clean = cim_conv2d(x, dp, dcfg, compute_dtype=jnp.float32)
+    y_zero = cim_conv2d(x, dp, dcfg, variation_key=jax.random.PRNGKey(5),
+                        variation_std=0.0, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_clean), np.asarray(y_zero))
+
+
+def test_perturb_packed_baked_equals_lazy():
+    """pack-time baked noise == forward-time lazy noise from the same key
+    (the 'carry' and 'lazily materialize' options are one realization)."""
+    cfg = _conv_cfg()
+    p, x = _conv_setup(cfg)
+    dp = pack_deploy_conv(p, cfg)
+    dcfg = cfg.replace(mode="deploy")
+    vk = jax.random.PRNGKey(11)
+    y_lazy = cim_conv2d(x, dp, dcfg, variation_key=vk, variation_std=0.2,
+                        compute_dtype=jnp.float32)
+    baked = perturb_packed(dp, vk, 0.2)
+    assert baked["w_digits"].dtype == jnp.float32
+    y_baked = cim_conv2d(x, baked, dcfg, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_lazy), np.asarray(y_baked))
+    # pack-time baking is the same op
+    dp2 = pack_deploy_conv(p, cfg, variation_key=vk, variation_std=0.2)
+    np.testing.assert_array_equal(np.asarray(dp2["w_digits"]),
+                                  np.asarray(baked["w_digits"]))
+
+
+def test_perturb_packed_sample_folding():
+    cfg = _lin_cfg()
+    p, _ = _lin_setup(cfg)
+    pd = pack_deploy(p, cfg)
+    key = jax.random.PRNGKey(0)
+    a = perturb_packed(pd, key, 0.2, sample=0)["w_digits"]
+    b = perturb_packed(pd, key, 0.2, sample=1)["w_digits"]
+    c = perturb_packed(pd, jax.random.fold_in(key, 1), 0.2)["w_digits"]
+    assert float(jnp.max(jnp.abs(a - b))) > 0
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# whole-model and statistical properties
+# ---------------------------------------------------------------------------
+
+def test_resnet_deploy_matches_emulate_under_variation():
+    from repro.models import resnet
+    cim = _conv_cfg()
+    cfg = resnet.ResNetConfig(name="tiny", depth=20, n_classes=10,
+                              widths=(8, 16), in_hw=8, cim=cim)
+    params, state = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    params = resnet.calibrate(params, state, x, cfg)
+    vk = jax.random.PRNGKey(21)
+    y_e, _ = resnet.forward(params, state, x, cfg, train=False,
+                            variation_key=vk, variation_std=0.15)
+    dp = resnet.pack_deploy(params, cfg)
+    dcfg = dataclasses.replace(cfg, cim=cim.replace(mode="deploy"))
+    y_d, _ = resnet.forward(dp, state, x, dcfg, train=False,
+                            variation_key=vk, variation_std=0.15)
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_e),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_resnet_variation_keys_match_forward_order():
+    from repro.models import resnet
+    cim = _conv_cfg()
+    cfg = resnet.ResNetConfig(name="tiny", depth=20, n_classes=10,
+                              widths=(8, 16), in_hw=8, cim=cim)
+    names = [n for n, _ in resnet.conv_layer_names(cfg)]
+    assert names[0] == "s0b0.conv1" and "s1b0.proj" in names
+    keys = resnet.variation_keys(jax.random.PRNGKey(0), cfg)
+    assert set(keys) == set(names)
+    assert resnet.variation_keys(None, cfg) is None
+    # taps cover exactly the conv layers, with the right spatial dims
+    params, state = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    _, _, taps = resnet.forward(params, state, x, cfg, train=False,
+                                return_taps=True)
+    assert set(taps) == set(names)
+
+
+def test_mc_psum_error_grows_monotonically_with_sigma():
+    """Statistical contract of the Monte-Carlo harness: mean relative
+    deploy-output error increases with sigma (common random numbers
+    across sigma levels make this deterministic in practice)."""
+    cfg = _lin_cfg(array_rows=64, psum_bits=8, act_bits=8)
+    p, x = _lin_setup(cfg, k=64, n=16, b=32)
+    pd = pack_deploy(p, cfg)
+    sigmas = (0.05, 0.1, 0.2, 0.4)
+    errs = robustness.monte_carlo_linear_error(
+        pd, cfg, x, key=jax.random.PRNGKey(0), sigmas=sigmas, n_samples=6)
+    assert errs.shape == (len(sigmas), 6)
+    mean = errs.mean(axis=1)
+    assert np.all(mean > 0)
+    assert np.all(np.diff(mean) > 0), mean
+
+
+def test_per_layer_attribution_runs_on_deploy():
+    from repro.models import resnet
+    cim = _conv_cfg()
+    cfg = resnet.ResNetConfig(name="tiny", depth=20, n_classes=10,
+                              widths=(8, 16), in_hw=8, cim=cim)
+    params, state = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    params = resnet.calibrate(params, state, x, cfg)
+    dp = resnet.pack_deploy(params, cfg)
+    dcfg = dataclasses.replace(cfg, cim=cim.replace(mode="deploy"))
+    attrib = robustness.per_layer_attribution(
+        dp, state, dcfg, x, key=jax.random.PRNGKey(2), sigma=0.3)
+    names = [n for n, _ in resnet.conv_layer_names(cfg)]
+    assert [a.name for a in attrib] == names
+    for a in attrib:
+        assert np.isfinite(a.rel_err) and a.rel_err > 0
+        assert a.col_err.shape[0] in (8, 16)
+        assert 0 <= a.worst_col < a.col_err.shape[0]

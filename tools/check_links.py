@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links (CI docs job).
+
+Scans the repo's markdown files for [text](target) links and verifies
+that every non-URL target exists relative to the file (fragments are
+stripped; bare-fragment links are ignored). Exits non-zero listing every
+broken link, so README/DESIGN can't rot silently.
+
+  python tools/check_links.py [file.md ...]   # default: all tracked *.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO = Path(__file__).resolve().parent.parent
+
+
+def md_files() -> list[Path]:
+    return sorted(p for p in REPO.rglob("*.md")
+                  if not any(part.startswith(".") or part == "node_modules"
+                             for part in p.relative_to(REPO).parts))
+
+
+def broken_links(path: Path) -> list[str]:
+    out = []
+    text = path.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                out.append(f"{path.relative_to(REPO)}:{lineno}: "
+                           f"broken link -> {target}")
+    return out
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a).resolve() for a in argv] or md_files()
+    problems = []
+    for f in files:
+        problems.extend(broken_links(f))
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if problems else 'ok'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
