@@ -12,14 +12,15 @@ BlockSpec index map and quantizes each array-tile accumulator in VMEM
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CIMConfig, calibrate_cim_conv, cim_conv2d,
-                        conv_tiling, init_cim_conv, pack_deploy_conv)
+from repro.api import DeployArtifact, QuantConv2d, conv2d
+from repro.core import CIMConfig, conv_tiling
 from repro.kernels.ref import conv_pads
 
 from .bench_kernel import dtype_bytes
@@ -58,22 +59,28 @@ def run(csv=None):
                     act_bits=8, psum_bits=6, array_rows=128, array_cols=128,
                     act_signed=False)
     key = jax.random.PRNGKey(0)
-    p = init_cim_conv(key, kh, kh, c_in, c_out, cfg)
     x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1),
                                       (b, hw, hw, c_in)))
-    p = calibrate_cim_conv(x, p, cfg, stride=stride, padding=padding)
-    dp = pack_deploy_conv(p, cfg)
+    layer = QuantConv2d(kh, kh, c_in, c_out, cfg, stride=stride,
+                        padding=padding).init(key).calibrate(x)
+    # pack through a saved+reloaded DeployArtifact so the benchmarked
+    # bytes are exactly what a served model loads (no hand-rolled
+    # packing drift between bench and production)
+    with tempfile.TemporaryDirectory() as d:
+        layer.pack().save(d)
+        art = DeployArtifact.load(d)
+    dp = art.params
 
     variants = (
-        ("emulate_groupconv", p, cfg),
-        ("deploy_jnp_ref", dp, cfg.replace(mode="deploy", use_kernel=False)),
+        ("emulate_groupconv", layer.params, cfg),
+        ("deploy_jnp_ref", dp, art.config.replace(mode="ref")),
         ("deploy_pallas_interpret", dp,
-         cfg.replace(mode="deploy", use_kernel=True)),
+         art.config.replace(use_kernel=True)),
     )
     out0 = None
     results = []
     for name, params, c in variants:
-        fn = jax.jit(lambda x_, params=params, c=c: cim_conv2d(
+        fn = jax.jit(lambda x_, params=params, c=c: conv2d(
             x_, params, c, stride=stride, padding=padding,
             compute_dtype=jnp.float32))
         out = fn(x)

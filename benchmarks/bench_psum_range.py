@@ -8,10 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitsplit import split_digits
+from repro.api import calibrate_linear as calibrate_cim
+from repro.api import init_linear as init_cim_linear
 from repro.core.cim_linear import (CIMConfig, _quantize_act,
                                    _quantize_weight_int, _tile_digits,
-                                   _tile_inputs, calibrate_cim,
-                                   init_cim_linear, weight_scales_from)
+                                   _tile_inputs, weight_scales_from)
 from repro.core.granularity import Granularity as G
 
 

@@ -18,6 +18,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.api import pack_model
 from repro.core.granularity import Granularity as G
 from repro.eval import robustness
 from repro.models import resnet
@@ -46,9 +47,10 @@ def run(steps=150, seed=0, csv=None, n_samples=N_SAMPLES, n_eval=256):
     for name, gw, gp in schemes:
         cim = make_cim(gw, gp)
         r = train_qat(cim, steps=steps, seed=seed, data=data)
-        # pack once; every MC sample is a lazy perturbation of these planes
+        # pack once (the generic DeployArtifact tree walk); every MC
+        # sample is a lazy perturbation of these planes
         cfg_e = resnet_cfg(cim)
-        packed = resnet.pack_deploy(r["params"], cfg_e)
+        packed = pack_model(r["params"], cfg_e.cim)
         dcfg = dataclasses.replace(cfg_e, cim=cim.replace(mode="deploy"))
         sweep = robustness.monte_carlo_resnet(
             packed, r["state"], dcfg, xte, yte,

@@ -1,17 +1,21 @@
 """Quickstart: the paper's column-wise CIM quantization in five minutes.
 
-Builds a CIM-quantized linear layer, calibrates it, compares granularities,
-packs it for deployment (int8 digit planes + fused scales -> the Pallas
-kernel path) and verifies bit-exactness.
+Walks the unified layer lifecycle (repro.api): build a CIM-quantized
+linear handle, calibrate it, compare granularities, pack it into a
+versioned DeployArtifact (int8 digit planes + fused scales -> the Pallas
+kernel path), save/load the artifact and verify the round trip is
+bit-exact across every packed backend.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CIMConfig, Granularity, calibrate_cim, cim_linear,
-                        init_cim_linear, pack_deploy)
+from repro.api import DeployArtifact, QuantLinear
+from repro.core import CIMConfig, Granularity
 
 K, N, BATCH = 512, 128, 32
 
@@ -30,29 +34,39 @@ x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, K)) * 0.5
 print("== column-wise weight + partial-sum quantization (the paper) ==")
 for g in (Granularity.LAYER, Granularity.ARRAY, Granularity.COLUMN):
     cfg = base.replace(weight_granularity=g, psum_granularity=g)
-    params = init_cim_linear(key, K, N, cfg)
+    layer = QuantLinear(K, N, cfg).init(key)
     # heterogeneous output columns — where fine granularity matters
-    params["w"] = params["w"] * jnp.logspace(-1.5, 0.5, N)[None, :]
-    params = calibrate_cim(x, params, cfg)
-    y_q = cim_linear(x, params, cfg, compute_dtype=jnp.float32)
-    y_fp = cim_linear(x, params, cfg.replace(mode="off"),
-                      compute_dtype=jnp.float32)
+    layer.params["w"] = layer.params["w"] * jnp.logspace(-1.5, 0.5, N)[None, :]
+    layer.calibrate(x)
+    y_q = layer(x)
+    y_fp = layer.with_backend("off")(x)
     rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
     t = cfg.tiling(K, N)
     print(f"  {g.value:7s}: quant rel-err {rel:.4f} | dequant muls/layer "
           f"{t.dequant_muls(g, g):5d}")
 
-print("\n== deploy packing (int8 digit planes -> Pallas kernel) ==")
-cfg = base
-params = init_cim_linear(key, K, N, cfg)
-params = calibrate_cim(x, params, cfg)
-y_emulate = cim_linear(x, params, cfg, compute_dtype=jnp.float32)
-deploy = pack_deploy(params, cfg)
-y_deploy = cim_linear(x, deploy, cfg.replace(mode="deploy"),
-                      compute_dtype=jnp.float32)
+print("\n== lifecycle: quantize -> calibrate -> pack -> DeployArtifact ==")
+layer = QuantLinear(K, N, base).init(key).calibrate(x)
+y_emulate = layer(x)
+
+artifact = layer.pack()                       # versioned deploy artifact
+with tempfile.TemporaryDirectory() as d:
+    artifact.save(d)                          # atomic, bit-exact on disk
+    loaded = DeployArtifact.load(d)
+
+served = QuantLinear.from_artifact(loaded)    # deploy backend (Pallas)
+y_deploy = served(x)
+y_ref = served.with_backend("ref")(x)         # packed jnp oracle
 print(f"  emulate vs deploy max |diff|: "
       f"{float(jnp.max(jnp.abs(y_emulate - y_deploy))):.2e}  (bit-exact)")
+np.testing.assert_allclose(np.asarray(y_deploy), np.asarray(y_ref),
+                           rtol=1e-5, atol=1e-5)  # kernel vs jnp oracle
+y_mem = QuantLinear.from_artifact(artifact)(x)   # pre-save, in memory
+print(f"  layout_version={loaded.layout_version}, "
+      f"backend={loaded.config.mode!r}, save->load bit-exact: "
+      f"{bool(jnp.all(y_mem == y_deploy))}")
+assert bool(jnp.all(y_mem == y_deploy)), "artifact round trip drifted"
 w_bytes_bf16 = K * N * 2
-w_bytes_cim = deploy["w_digits"].size  # int8 per digit plane
+w_bytes_cim = loaded.params["w_digits"].size  # int8 per digit plane
 print(f"  weight HBM: bf16 {w_bytes_bf16/1e3:.0f} KB -> CIM int-digit "
       f"{w_bytes_cim/1e3:.0f} KB ({w_bytes_bf16/w_bytes_cim:.1f}x smaller)")

@@ -1,42 +1,81 @@
-"""Serving example: batched generation from a CIM deploy-mode model —
+"""Serving example: batched generation from a CIM deploy artifact —
 weights live as int8 digit planes with fused per-column dequant scales
-(the memory-roofline win for decode).
+(the memory-roofline win for decode), served through the fused Pallas
+deploy path from a DeployArtifact loaded off disk.
+
+Lifecycle exercised end to end: init (emulate QAT params) -> pack_model
+-> DeployArtifact.save -> DeployArtifact.load -> engine_from_artifact,
+with a logits-parity check between the emulate path and the served
+deploy path.
 
   PYTHONPATH=src python examples/serve_quantized_lm.py
 """
+import dataclasses
+import tempfile
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.api import model_artifact
 from repro.configs.registry import get_config
 from repro.core.cim_linear import CIMConfig
 from repro.core.granularity import Granularity as G
 from repro.models.registry import get_model
 from repro.nn import init_params
-from repro.serve.engine import ServingEngine
+from repro.serve.engine import ServingEngine, engine_from_artifact
 
 cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
                 act_bits=8, psum_bits=6, array_rows=32, array_cols=32,
-                weight_granularity=G.COLUMN, psum_granularity=G.COLUMN,
-                use_kernel=False)
+                weight_granularity=G.COLUMN, psum_granularity=G.COLUMN)
 cfg = get_config("qwen3-0.6b", reduced=True, cim=cim)
 model = get_model(cfg)
 params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
 
+# pack every CIM linear in the tree and ship it as a versioned artifact —
+# the same bytes a production server would load
+artifact = model_artifact(params, cim, meta={"arch": "qwen3-0.6b-reduced"})
+with tempfile.TemporaryDirectory() as d:
+    artifact.save(d)
+    loaded_path_artifact = type(artifact).load(d)
+print(f"[serve] packed model artifact: layout_version="
+      f"{loaded_path_artifact.layout_version}, backend="
+      f"{loaded_path_artifact.config.mode!r}")
+
 B = 4
-engine = ServingEngine(model, cfg, params, batch_size=B, max_len=128)
 prompts = np.random.RandomState(0).randint(0, cfg.vocab, (B, 12)
                                            ).astype(np.int32)
+
+# parity: emulate logits vs deploy logits from the LOADED artifact
+deploy_cfg = dataclasses.replace(cfg, cim=loaded_path_artifact.config)
+cache_e = model.init_cache(cfg, B, 128)
+cache_d = model.init_cache(deploy_cfg, B, 128)
+logits_e, _ = model.decode_step(params, cache_e, jnp.asarray(prompts), cfg)
+logits_d, _ = model.decode_step(loaded_path_artifact.params, cache_d,
+                                jnp.asarray(prompts), deploy_cfg)
+diff = float(jnp.max(jnp.abs(logits_e.astype(jnp.float32)
+                             - logits_d.astype(jnp.float32))))
+scale = float(jnp.max(jnp.abs(logits_e.astype(jnp.float32)))) + 1e-9
+assert diff / scale < 5e-2, (
+    f"deploy logits diverge from emulate: max|diff|={diff:.3e} "
+    f"(rel {diff / scale:.3e})")
+print(f"[serve] emulate vs deploy logits max |diff|: {diff:.2e} "
+      f"(rel {diff / scale:.2e}) — within tolerance")
+
+# serve from the loaded artifact on the deploy backend
+engine = engine_from_artifact(loaded_path_artifact, cfg, batch_size=B,
+                              max_len=128)
 t0 = time.time()
 out = engine.generate_batch(prompts, 24)
 dt = time.time() - t0
 print(f"[serve] generated {out.shape} tokens in {dt:.1f}s "
-      f"({out.size / dt:.1f} tok/s, CIM emulate-mode weights)")
+      f"({out.size / dt:.1f} tok/s, int digit planes on the deploy path)")
 print(f"[serve] continuations[0]: {out[0].tolist()}")
 
-# slot engine with mixed-length requests
-eng = ServingEngine(model, cfg, params, batch_size=2, max_len=64)
+# slot engine with mixed-length requests, same loaded artifact
+eng = engine_from_artifact(loaded_path_artifact, cfg, batch_size=2,
+                           max_len=64)
 rids = [eng.submit([1, 2, 3], 6), eng.submit([9, 8], 4), eng.submit([5], 5)]
 done = {}
 while len(done) < 3:

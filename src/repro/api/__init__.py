@@ -1,0 +1,43 @@
+"""Public CIM-layer lifecycle API: quantize -> calibrate -> pack -> serve.
+
+One vocabulary for every CIM layer (DESIGN.md §9):
+
+* **Handles** — ``QuantLinear`` / ``QuantConv2d`` with uniform
+  ``init(key) -> calibrate(x) -> __call__(x, variation=...) -> pack()``.
+* **Functional layer** — ``init_linear``/``linear``/``calibrate_linear``/
+  ``pack_linear`` and the ``*_conv``/``conv2d`` counterparts: the same
+  lifecycle on explicit param trees, for jit/grad QAT loops.
+* **Backends** — the ``Backend`` registry (``off``/``emulate``/
+  ``deploy``/``ref``) behind ``CIMConfig.mode``; register new execution
+  strategies with ``register_backend``.
+* **Artifacts** — ``DeployArtifact`` (versioned, bit-exact save/load of
+  packed digit planes + scales + config) and ``pack_model``/
+  ``model_artifact`` for whole param trees.
+
+The pre-API entry points (``repro.core.init_cim_linear``, ``cim_linear``,
+``pack_deploy``, conv counterparts, ``models.resnet.pack_deploy``) remain
+as deprecated shims; see the migration table in README.md.
+"""
+from repro.core.cim_conv import _calibrate_conv as calibrate_conv
+from repro.core.cim_conv import _conv_forward as conv2d
+from repro.core.cim_conv import _init_conv as init_conv
+from repro.core.cim_conv import _pack_conv as pack_conv
+from repro.core.cim_linear import CIMConfig
+from repro.core.cim_linear import _calibrate_linear as calibrate_linear
+from repro.core.cim_linear import _init_linear as init_linear
+from repro.core.cim_linear import _linear_forward as linear
+from repro.core.cim_linear import _pack_linear as pack_linear
+
+from .artifact import (ARTIFACT_LAYOUT_VERSION, DeployArtifact,
+                       model_artifact, pack_model)
+from .backends import (Backend, get_backend, is_packed, register_backend,
+                       registered_backends)
+from .handles import QuantConv2d, QuantLinear, Variation
+
+__all__ = [
+    "ARTIFACT_LAYOUT_VERSION", "Backend", "CIMConfig", "DeployArtifact",
+    "QuantConv2d", "QuantLinear", "Variation", "calibrate_conv",
+    "calibrate_linear", "conv2d", "get_backend", "init_conv", "init_linear",
+    "is_packed", "linear", "model_artifact", "pack_conv", "pack_linear",
+    "pack_model", "register_backend", "registered_backends",
+]

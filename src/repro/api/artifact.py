@@ -1,0 +1,214 @@
+"""Versioned on-disk deploy artifacts: the unit a served model loads.
+
+A ``DeployArtifact`` is the packed, self-describing deployment state of
+one CIM layer or a whole model tree: int digit planes, learned scales,
+the ``CIMConfig`` that produced them (pinned to a packed backend) and a
+layout-version tag. ``save``/``load`` are built on ``repro.checkpoint``
+(atomic rename, raw-byte leaves) so the round trip is **bit-exact** —
+including int4 planes and variation-baked (float) planes — and a pack
+benched today is byte-identical to the pack a server loads tomorrow.
+
+On-disk layout::
+
+    <path>/
+      artifact.json        kind, layout_version, config, meta
+      step_00000000/       repro.checkpoint leaf store for ``params``
+
+``pack_model`` generalizes the per-layer pack to arbitrary param trees:
+any dict node carrying the CIM-layer quartet {w, s_w, s_p, s_a} is
+packed (linear for 2-D weights, conv for 4-D HWIO; stacked
+scan-over-layers variants vmap over the leading layer axis); every other
+node — embeddings, norms, biases, full-precision stems, MoE expert
+banks — passes through untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as _ckpt
+from repro.core.cim_conv import _pack_conv
+from repro.core.cim_linear import CIMConfig, _pack_linear
+
+ARTIFACT_LAYOUT_VERSION = 1
+
+_KINDS = ("linear", "conv", "model")
+
+
+def _packed_config(cfg: CIMConfig) -> CIMConfig:
+    """Pin the artifact's config to a packed backend (deploy by default)."""
+    from .backends import get_backend
+    if get_backend(cfg.mode).packed:
+        return cfg
+    return cfg.replace(mode="deploy")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeployArtifact:
+    """Packed deployment state: digit planes + scales + config + version.
+
+    ``params`` is the packed tree the deploy/ref backends consume
+    directly (``w_digits`` digit planes, ``s_w``/``s_p``/``s_a`` scales;
+    for ``kind="model"`` the whole packed model tree). ``config`` always
+    names a packed backend, so ``forward(x, artifact.params,
+    artifact.config)`` is the served fast path with no further mode
+    surgery. ``meta`` carries layer geometry (k/n, conv stride/padding)
+    and free-form provenance.
+    """
+
+    kind: str                              # linear | conv | model
+    config: CIMConfig
+    params: Dict[str, Any]
+    layout_version: int = ARTIFACT_LAYOUT_VERSION
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown artifact kind {self.kind!r}; "
+                             f"valid: {_KINDS}")
+        from .backends import get_backend
+        if not get_backend(self.config.mode).packed:
+            raise ValueError(
+                f"DeployArtifact.config must name a packed backend, got "
+                f"mode={self.config.mode!r}; use config.replace("
+                "mode='deploy') (packing helpers do this for you)")
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Write the artifact; ``artifact.json`` lands last (fsynced +
+        renamed), so its presence marks a complete artifact. When
+        overwriting an existing artifact the stale header is removed
+        *before* the new params land — a crash mid-overwrite leaves an
+        incomplete (loudly unloadable) artifact, never new params paired
+        with an old header."""
+        os.makedirs(path, exist_ok=True)
+        stale = os.path.join(path, "artifact.json")
+        if os.path.exists(stale):
+            os.remove(stale)
+        _ckpt.save(path, 0, self.params)
+        head = {
+            "format": "repro.api.DeployArtifact",
+            "layout_version": self.layout_version,
+            "kind": self.kind,
+            "config": dataclasses.asdict(self.config),
+            "meta": self.meta,
+        }
+        jpath = os.path.join(path, "artifact.json")
+        tmp = jpath + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(head, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, jpath)   # atomic: never a headers/params mismatch
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "DeployArtifact":
+        jpath = os.path.join(path, "artifact.json")
+        if not os.path.exists(jpath):
+            raise FileNotFoundError(
+                f"{path} is not a DeployArtifact (no artifact.json)")
+        with open(jpath) as f:
+            head = json.load(f)
+        version = head.get("layout_version")
+        if version is None or version > ARTIFACT_LAYOUT_VERSION:
+            raise ValueError(
+                f"artifact at {path} has layout_version {version!r}; this "
+                f"build reads versions <= {ARTIFACT_LAYOUT_VERSION}. "
+                "Upgrade the repro library or re-pack the artifact.")
+        cfg = CIMConfig(**head["config"])
+        params = jax.tree.map(jnp.asarray, _ckpt.restore_tree(path, step=0))
+        return cls(kind=head["kind"], config=cfg, params=params,
+                   layout_version=version, meta=dict(head.get("meta", {})))
+
+
+# ---------------------------------------------------------------------------
+# generic model packing
+# ---------------------------------------------------------------------------
+
+_CIM_LAYER_KEYS = frozenset({"w", "s_w", "s_p", "s_a"})
+
+
+def _is_cim_layer(node: Dict) -> bool:
+    return (isinstance(node, dict) and _CIM_LAYER_KEYS <= set(node)
+            and getattr(node["w"], "ndim", 0) >= 2)
+
+
+def _path_key(key: jax.Array, path: tuple) -> jax.Array:
+    h = 0
+    for part in path:
+        for ch in str(part):
+            h = (h * 131 + ord(ch)) % (2 ** 31 - 1)
+        h = (h * 131 + 7) % (2 ** 31 - 1)
+    return jax.random.fold_in(key, h)
+
+
+def pack_model(params: Dict, cfg: CIMConfig, *,
+               variation_key: Optional[jax.Array] = None,
+               variation_std=None) -> Dict:
+    """Walk a model param tree, packing every CIM layer for deployment.
+
+    A node is a CIM layer iff it carries {w, s_w, s_p, s_a}: 2-D ``w`` is
+    a linear layer, 4-D an HWIO conv; 3-D/5-D are their stacked
+    (scan-over-layers) forms, packed with a vmap over the layer axis.
+    Full-precision nodes (no scales) pass through, so the same walk
+    handles ResNets (fp stem/fc, BN), transformers (embeddings, norms,
+    stacked blocks) and MoE trees (expert banks stay emulate — their
+    deploy story is per-expert packing, not digit planes in a scan).
+
+    ``variation_key``/``variation_std`` bake ONE device realization into
+    the planes, with an independent per-layer key folded from the tree
+    path (deterministic across processes)."""
+    def walk(node, path):
+        if _is_cim_layer(node):
+            w = node["w"]
+            vkey = (None if variation_key is None
+                    else _path_key(variation_key, path))
+            kw = dict(variation_key=vkey, variation_std=variation_std)
+            layer = {k: node[k] for k in _CIM_LAYER_KEYS}
+            # non-quartet keys (e.g. a bias) ride along untouched
+            extras = {k: v for k, v in node.items()
+                      if k not in _CIM_LAYER_KEYS}
+            if w.ndim == 2:
+                return {**extras, **_pack_linear(layer, cfg, **kw)}
+            if w.ndim == 4:
+                return {**extras, **_pack_conv(layer, cfg, **kw)}
+            if w.ndim in (3, 5):
+                pack = _pack_linear if w.ndim == 3 else _pack_conv
+                if vkey is None:
+                    packed = jax.vmap(lambda p: pack(p, cfg))(layer)
+                else:
+                    keys = jax.random.split(vkey, w.shape[0])
+                    packed = jax.vmap(lambda p, k: pack(
+                        p, cfg, variation_key=k,
+                        variation_std=variation_std))(layer, keys)
+                return {**extras, **packed}
+            raise ValueError(f"CIM layer at {'/'.join(path)} has "
+                             f"unsupported weight rank {w.ndim}")
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            # recurse so CIM layers inside sequences are packed, and
+            # normalize tuples to lists: checkpoint.restore_tree rebuilds
+            # sequence nodes as lists, so normalizing here keeps the
+            # in-memory pack and a loaded artifact structure-exact
+            return [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+        return node
+    return walk(params, ())
+
+
+def model_artifact(params: Dict, cfg: CIMConfig, *,
+                   meta: Optional[Dict[str, Any]] = None,
+                   variation_key: Optional[jax.Array] = None,
+                   variation_std=None) -> DeployArtifact:
+    """``pack_model`` + wrap into a saveable model ``DeployArtifact``."""
+    packed = pack_model(params, cfg, variation_key=variation_key,
+                        variation_std=variation_std)
+    return DeployArtifact(kind="model", config=_packed_config(cfg),
+                          params=packed, meta=dict(meta or {}))

@@ -1,0 +1,146 @@
+"""Execution-backend registry: the single dispatch point for CIM layers.
+
+A ``Backend`` bundles the linear and conv forward implementations for one
+execution strategy. ``CIMConfig.mode`` is now just a *name* that resolves
+here — the config never encodes arithmetic, and an unregistered name
+fails at ``CIMConfig`` construction (``core.cim_linear._KNOWN_MODES``),
+not at trace time.
+
+Builtins (registered on import):
+
+  off      full-precision baseline (plain matmul / XLA conv).
+  emulate  paper-faithful QAT path: LSQ fake-quant, bit-split digits,
+           per-array integer partial sums materialized for gradients.
+  deploy   packed-int inference through the fused Pallas kernels
+           (``cfg.use_kernel=False`` falls back to the jnp oracle for
+           portable HLO) — bit-exact with ``emulate``.
+  ref      packed-int inference forced onto the jnp oracle regardless of
+           ``cfg.use_kernel`` — the arbitration reference for kernel
+           debugging and backend-equivalence tests.
+
+``register_backend`` accepts additional strategies (e.g. a noise-injected
+canary or a per-accelerator kernel variant); registration makes the name
+a valid ``CIMConfig.mode`` everywhere — handles, model zoo, serving.
+
+Backend callables take positional tails so the dispatch sites stay
+uniform:
+
+  linear(x, params, cfg, variation_key, sigma, compute_dtype)
+  conv(x, params, cfg, stride, padding, variation_key, sigma,
+       compute_dtype)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import sys
+
+import repro.core.cim_conv
+import repro.core.cim_linear
+
+# ``repro.core``'s __init__ re-exports same-named *functions* (the
+# deprecated shims), shadowing the submodule attributes — resolve the
+# modules through sys.modules.
+_conv = sys.modules["repro.core.cim_conv"]
+_lin = sys.modules["repro.core.cim_linear"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One execution strategy for every CIM layer kind.
+
+    ``packed=True`` backends consume deploy-packed params (int digit
+    planes, ``w_digits``); ``packed=False`` backends consume the trainable
+    float-weight params (``w``). ``repro.nn.linear.linear_specs`` and
+    ``models.layers.conv_specs`` key their parameter layout off this flag.
+    """
+
+    name: str
+    linear: Callable        # (x, params, cfg, vkey, sigma, compute_dtype)
+    conv: Callable          # (x, params, cfg, stride, padding, vkey, sigma,
+                            #  compute_dtype)
+    packed: bool
+    description: str = ""
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Register a backend; its name becomes a valid ``CIMConfig.mode``."""
+    if not overwrite and backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} is already registered; "
+                         "pass overwrite=True to replace it")
+    _REGISTRY[backend.name] = backend
+    _lin._KNOWN_MODES.add(backend.name)
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown CIM backend {name!r}; registered: "
+                       f"{registered_backends()}") from None
+
+
+def registered_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def is_packed(cfg) -> bool:
+    """True when ``cfg``'s backend consumes packed digit planes
+    (``w_digits``) rather than the trainable float weight. This is what
+    ``linear_specs``/``conv_specs`` key their parameter layout off."""
+    if cfg is None or not cfg.enabled:
+        return False
+    return get_backend(cfg.mode).packed
+
+
+# ---------------------------------------------------------------------------
+# builtins
+# ---------------------------------------------------------------------------
+
+def _linear_ref(x, params, cfg, vkey, sigma, compute_dtype):
+    return _lin._forward_deploy(x, params, cfg.replace(use_kernel=False),
+                                vkey, sigma, compute_dtype)
+
+
+def _conv_ref(x, params, cfg, stride, padding, vkey, sigma, compute_dtype):
+    return _conv._forward_conv_deploy(x, params,
+                                      cfg.replace(use_kernel=False),
+                                      stride, padding, vkey, sigma,
+                                      compute_dtype)
+
+
+register_backend(Backend(
+    name="off",
+    linear=_lin._forward_off,
+    conv=_conv._forward_conv_off,
+    packed=False,
+    description="full-precision baseline (no quantization)"))
+
+register_backend(Backend(
+    name="emulate",
+    linear=_lin._forward_emulate,
+    conv=_conv._forward_conv_emulate,
+    packed=False,
+    description="differentiable QAT path; partial sums materialized so "
+                "LSQ gradients flow through the ADC"))
+
+register_backend(Backend(
+    name="deploy",
+    linear=_lin._forward_deploy,
+    conv=_conv._forward_conv_deploy,
+    packed=True,
+    description="packed int digit planes on the fused Pallas kernels "
+                "(jnp oracle when cfg.use_kernel=False)"))
+
+register_backend(Backend(
+    name="ref",
+    linear=_linear_ref,
+    conv=_conv_ref,
+    packed=True,
+    description="packed int digit planes on the jnp oracle (kernel "
+                "arbitration reference)"))

@@ -1,0 +1,199 @@
+"""Typed layer handles: one lifecycle for every CIM layer.
+
+``QuantLinear`` and ``QuantConv2d`` wrap a ``CIMConfig`` plus a param
+tree behind the uniform lifecycle
+
+    handle = QuantLinear(k, n, cfg).init(key)   # trainable emulate params
+    handle.calibrate(x)                         # one-batch s_a/s_p init
+    y = handle(x, variation=Variation(key, s))  # forward on cfg's backend
+    artifact = handle.pack()                    # versioned DeployArtifact
+    served = QuantLinear.from_artifact(artifact)  # packed, deploy backend
+
+so linear and conv stop being separate vocabularies (`init_cim_linear`
+vs `init_cim_conv`, `calibrate_cim` vs `calibrate_cim_conv`, ...).
+Handles are thin, mutable conveniences for scripts/examples/serving; QAT
+training loops keep using the functional layer (``repro.api.linear`` /
+``conv2d`` on explicit param trees) which jit/grad transform cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_conv import (_calibrate_conv, _conv_forward, _init_conv,
+                                 _pack_conv)
+from repro.core.cim_linear import (CIMConfig, _calibrate_linear, _init_linear,
+                                   _linear_forward, _pack_linear)
+
+from .artifact import DeployArtifact, _packed_config
+
+
+@dataclasses.dataclass(frozen=True)
+class Variation:
+    """One Monte-Carlo device realization: log-normal cell noise drawn
+    from ``key`` with std ``std`` (may be a traced scalar; ``None`` falls
+    back to ``cfg.variation_std``)."""
+    key: Optional[jax.Array] = None
+    std: Optional[object] = None
+
+
+def _vkv(variation: Optional[Variation]):
+    if variation is None:
+        return None, None
+    return variation.key, variation.std
+
+
+class _Handle:
+    """Shared lifecycle plumbing; subclasses bind the layer kind."""
+
+    kind: str
+
+    def __init__(self, cfg: CIMConfig,
+                 params: Optional[Dict[str, jnp.ndarray]] = None):
+        self.cfg = cfg
+        self.params = params
+
+    def _require_params(self, op: str):
+        if self.params is None:
+            raise ValueError(f"{type(self).__name__}.{op}: no params — "
+                             "call .init(key) or .from_artifact(...) first")
+        return self.params
+
+    def _require_trainable(self, op: str):
+        params = self._require_params(op)
+        if "w" not in params:
+            raise ValueError(
+                f"{type(self).__name__}.{op}: params are packed digit "
+                "planes (w_digits); this operation needs the trainable "
+                "float weights — use the pre-pack handle or .init(key)")
+        return params
+
+    def with_backend(self, mode: str):
+        """Same params, dispatched to another registered backend. The
+        target backend must consume the params layout this handle holds
+        (packed digit planes vs trainable weights) — mismatches fail here
+        with a clear message, not as a KeyError mid-trace."""
+        from .backends import get_backend
+        target = get_backend(mode)   # unknown names fail loudly here too
+        if self.params is not None and self.cfg.enabled:
+            have_packed = "w_digits" in self.params
+            if target.packed != have_packed:
+                have = "packed digit planes" if have_packed \
+                    else "trainable float weights"
+                need = "packed digit planes" if target.packed \
+                    else "trainable float weights"
+                raise ValueError(
+                    f"backend {mode!r} consumes {need}, but this "
+                    f"{type(self).__name__} holds {have}; use .pack() / "
+                    ".from_artifact(...) to convert")
+        clone = type(self).__new__(type(self))
+        clone.__dict__.update(self.__dict__)
+        clone.cfg = self.cfg.replace(mode=mode)
+        return clone
+
+
+class QuantLinear(_Handle):
+    """CIM linear layer handle: x (..., K) @ W (K, N) -> (..., N)."""
+
+    kind = "linear"
+
+    def __init__(self, k: int, n: int, cfg: CIMConfig, *,
+                 params: Optional[Dict[str, jnp.ndarray]] = None):
+        super().__init__(cfg, params)
+        self.k, self.n = int(k), int(n)
+
+    def init(self, key: jax.Array, *, w_init_scale: float | None = None,
+             dtype=jnp.float32) -> "QuantLinear":
+        self.params = _init_linear(key, self.k, self.n, self.cfg,
+                                   w_init_scale, dtype)
+        return self
+
+    def calibrate(self, x: jnp.ndarray) -> "QuantLinear":
+        self.params = _calibrate_linear(x, self._require_trainable("calibrate"),
+                                        self.cfg)
+        return self
+
+    def __call__(self, x: jnp.ndarray, *,
+                 variation: Optional[Variation] = None,
+                 compute_dtype=jnp.float32) -> jnp.ndarray:
+        vkey, vstd = _vkv(variation)
+        return _linear_forward(x, self._require_params("__call__"), self.cfg,
+                               variation_key=vkey, variation_std=vstd,
+                               compute_dtype=compute_dtype)
+
+    def pack(self, *, variation: Optional[Variation] = None,
+             meta: Optional[Dict] = None) -> DeployArtifact:
+        vkey, vstd = _vkv(variation)
+        packed = _pack_linear(self._require_trainable("pack"), self.cfg,
+                              variation_key=vkey, variation_std=vstd)
+        m = {"k": self.k, "n": self.n, **(meta or {})}
+        return DeployArtifact(kind="linear", config=_packed_config(self.cfg),
+                              params=packed, meta=m)
+
+    @classmethod
+    def from_artifact(cls, artifact: DeployArtifact) -> "QuantLinear":
+        if artifact.kind != "linear":
+            raise ValueError(f"expected a 'linear' artifact, got "
+                             f"{artifact.kind!r}")
+        return cls(int(artifact.meta["k"]), int(artifact.meta["n"]),
+                   artifact.config, params=artifact.params)
+
+
+class QuantConv2d(_Handle):
+    """CIM conv2d handle: NHWC x, HWIO weight, stretched-kernel tiling."""
+
+    kind = "conv"
+
+    def __init__(self, kh: int, kw: int, c_in: int, c_out: int,
+                 cfg: CIMConfig, *, stride: int = 1, padding: str = "SAME",
+                 params: Optional[Dict[str, jnp.ndarray]] = None):
+        super().__init__(cfg, params)
+        self.kh, self.kw = int(kh), int(kw)
+        self.c_in, self.c_out = int(c_in), int(c_out)
+        self.stride, self.padding = int(stride), padding
+
+    def init(self, key: jax.Array, *, dtype=jnp.float32) -> "QuantConv2d":
+        self.params = _init_conv(key, self.kh, self.kw, self.c_in,
+                                 self.c_out, self.cfg, dtype)
+        return self
+
+    def calibrate(self, x: jnp.ndarray) -> "QuantConv2d":
+        self.params = _calibrate_conv(x, self._require_trainable("calibrate"),
+                                      self.cfg, stride=self.stride,
+                                      padding=self.padding)
+        return self
+
+    def __call__(self, x: jnp.ndarray, *,
+                 variation: Optional[Variation] = None,
+                 compute_dtype=jnp.float32) -> jnp.ndarray:
+        vkey, vstd = _vkv(variation)
+        return _conv_forward(x, self._require_params("__call__"), self.cfg,
+                             stride=self.stride, padding=self.padding,
+                             variation_key=vkey, variation_std=vstd,
+                             compute_dtype=compute_dtype)
+
+    def pack(self, *, variation: Optional[Variation] = None,
+             meta: Optional[Dict] = None) -> DeployArtifact:
+        vkey, vstd = _vkv(variation)
+        packed = _pack_conv(self._require_trainable("pack"), self.cfg,
+                            variation_key=vkey, variation_std=vstd)
+        m = {"kh": self.kh, "kw": self.kw, "c_in": self.c_in,
+             "c_out": self.c_out, "stride": self.stride,
+             "padding": self.padding, **(meta or {})}
+        return DeployArtifact(kind="conv", config=_packed_config(self.cfg),
+                              params=packed, meta=m)
+
+    @classmethod
+    def from_artifact(cls, artifact: DeployArtifact) -> "QuantConv2d":
+        if artifact.kind != "conv":
+            raise ValueError(f"expected a 'conv' artifact, got "
+                             f"{artifact.kind!r}")
+        m = artifact.meta
+        return cls(int(m["kh"]), int(m["kw"]), int(m["c_in"]),
+                   int(m["c_out"]), artifact.config,
+                   stride=int(m.get("stride", 1)),
+                   padding=m.get("padding", "SAME"),
+                   params=artifact.params)

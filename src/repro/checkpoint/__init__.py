@@ -1,3 +1,5 @@
-from .ckpt import CheckpointManager, latest_step, restore, save
+from .ckpt import (CheckpointManager, latest_step, restore, restore_tree,
+                   save)
 
-__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+__all__ = ["CheckpointManager", "latest_step", "restore", "restore_tree",
+           "save"]

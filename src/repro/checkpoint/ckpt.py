@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import queue
@@ -28,9 +29,18 @@ import jax
 import numpy as np
 
 
+_LIST_KEY = re.compile(r"^__\d+$")
+
+
 def _flatten(tree, path=""):
     if isinstance(tree, dict):
         for k in sorted(tree):
+            if isinstance(k, str) and _LIST_KEY.match(k):
+                # '__<i>' is the reserved list encoding; a dict using it
+                # would be indistinguishable from a list on restore_tree
+                raise ValueError(
+                    f"dict key {k!r} at {path or '<root>'} collides with "
+                    "the reserved list encoding '__<index>'; rename it")
             yield from _flatten(tree[k], f"{path}/{k}" if path else str(k))
     elif isinstance(tree, (tuple, list)):
         for i, v in enumerate(tree):
@@ -91,10 +101,9 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
-            shardings: Any = None) -> Any:
-    """Restore into the structure of ``like``. ``shardings`` (matching
-    pytree of jax.sharding.Sharding) reshards onto the current mesh."""
+def _load_leaves(ckpt_dir: str, step: Optional[int]) -> Dict[str, np.ndarray]:
+    """Shared restore substrate: {manifest path: leaf} with logical
+    dtypes (bfloat16/int4 via ml_dtypes), newest step when unspecified."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -102,12 +111,55 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
+    import ml_dtypes  # noqa: F401  (registers bfloat16/int4 with numpy)
     flat = {}
     for p, meta in manifest["leaves"].items():
         raw = np.load(os.path.join(path, meta["file"]))
         flat[p] = raw.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
-    tree = _unflatten_into(like, flat)
+    return flat
+
+
+def restore_tree(ckpt_dir: str, step: Optional[int] = None) -> Any:
+    """Restore a checkpoint WITHOUT a ``like`` template: the nested
+    dict/list structure is rebuilt from the manifest paths. This is what
+    self-describing artifacts (``repro.api.DeployArtifact``) load through
+    — the artifact on disk is the source of truth, not caller-side specs.
+    Leaves come back as numpy arrays with their logical dtypes."""
+    root: Dict[str, Any] = {}
+    for p, leaf in _load_leaves(ckpt_dir, step).items():
+        parts = p.split("/")
+        if parts and parts[0] == "":
+            parts = parts[1:]   # '/__0'-style paths: root is a list/tuple
+        if not parts:
+            return leaf         # bare-leaf root: the tree IS this leaf
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: listify(v) for k, v in node.items()}
+        # only the exact '__0'..'__n-1' contiguous pattern is _flatten's
+        # list encoding; any other '__'-prefixed keys stay a dict
+        if out and all(k.startswith("__") for k in out):
+            try:
+                nums = sorted(int(k[2:]) for k in out)
+            except ValueError:
+                return out
+            if nums == list(range(len(out))):
+                return [out[f"__{i}"] for i in range(len(out))]
+        return out
+
+    return listify(root)
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``. ``shardings`` (matching
+    pytree of jax.sharding.Sharding) reshards onto the current mesh."""
+    tree = _unflatten_into(like, _load_leaves(ckpt_dir, step))
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree

@@ -1,5 +1,11 @@
 """Core library: the paper's column-wise weight + partial-sum quantization
-for CIM accelerators, as composable JAX building blocks."""
+for CIM accelerators, as composable JAX building blocks.
+
+The per-layer lifecycle entry points exported here (``init_cim_linear``,
+``cim_linear``, ``calibrate_cim``, ``pack_deploy`` and their conv
+counterparts) are **deprecated shims** kept for downstream compatibility;
+new code uses ``repro.api`` (typed handles, backend registry, versioned
+``DeployArtifact``) — see the migration table in README.md."""
 from .bitsplit import place_values, recombine, split_digits
 from .cim_conv import (calibrate_cim_conv, cim_conv2d, conv_dequant_muls,
                        init_cim_conv, pack_deploy_conv)
@@ -13,7 +19,8 @@ from .variation import (apply_cell_variation, perturb_digits, perturb_packed,
 
 __all__ = [
     "ArrayTiling", "CIMConfig", "Granularity", "apply_cell_variation",
-    "calibrate_cim", "cim_conv2d", "cim_linear", "conv_dequant_muls",
+    "calibrate_cim", "calibrate_cim_conv", "cim_conv2d", "cim_linear",
+    "conv_dequant_muls",
     "conv_tiling", "init_cim_conv", "init_cim_linear", "init_scale_from",
     "lsq_fake_quant", "lsq_integer", "n_splits", "pack_deploy",
     "pack_deploy_conv", "perturb_digits", "perturb_packed", "place_values",

@@ -21,9 +21,9 @@ indexing or im2col linear ops. Two ideas, both reproduced natively:
 Bit-splits are the leading axis of the grouped-conv weight batch, as in
 Fig. 5's "weight duplication".
 
-A third mode, ``deploy``, evaluates the same arithmetic through the fused
-Pallas conv kernel (kernels/cim_conv) from ``pack_deploy_conv``'s packed
-int digit planes: stretched-kernel patches are extracted once (no
+A third backend, ``deploy``, evaluates the same arithmetic through the
+fused Pallas conv kernel (kernels/cim_conv) from ``repro.api.pack_conv``'s
+packed int digit planes: stretched-kernel patches are extracted once (no
 ``n_split``x activation tiling) and ADC quantization happens per
 array-tile accumulator in VMEM — the grouped-conv path's HBM partial-sum
 round-trip disappears (DESIGN.md §3, §7).
@@ -36,13 +36,13 @@ import jax
 import jax.numpy as jnp
 
 from .bitsplit import place_values, split_digits
-from .cim_linear import CIMConfig, _quantize_act
+from .cim_linear import CIMConfig, _deprecated, _quantize_act
 from .granularity import Granularity, conv_tiling
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
 from .variation import perturb_packed, variation_noise, variation_wanted
 
 
-def init_cim_conv(
+def _init_conv(
     key: jax.Array,
     kh: int, kw: int, c_in: int, c_out: int,
     cfg: CIMConfig,
@@ -108,7 +108,7 @@ def _quantize_conv_weight_int(params, cfg: CIMConfig, t, c_per_array, kh, kw,
     return w_hat / jnp.maximum(s_full, 1e-9)
 
 
-def cim_conv2d(
+def _conv_forward(
     x: jnp.ndarray,                      # (B, H, W, C_in)  NHWC
     params: Dict[str, jnp.ndarray],
     cfg: CIMConfig,
@@ -121,11 +121,13 @@ def cim_conv2d(
 ) -> jnp.ndarray:
     """Conv2d through the CIM framework. Returns (B, H', W', C_out).
 
-    Modes mirror ``cim_linear``: ``off`` is a plain conv, ``emulate`` the
+    ``cfg.mode`` resolves to a registered backend (repro.api.backends),
+    mirroring the linear layer: ``off`` is a plain conv, ``emulate`` the
     paper-faithful QAT grouped-conv path, ``deploy`` packed-int inference
-    through the fused Pallas conv kernel (from ``pack_deploy_conv``
+    through the fused Pallas conv kernel (from packed digit-plane
     params) — bit-exact with emulate, but the partial-sum tensor never
-    reaches HBM and activations are not replicated ``n_split``x.
+    reaches HBM and activations are not replicated ``n_split``x; ``ref``
+    is the packed jnp oracle.
 
     ``variation_key``/``variation_std`` evaluate one Monte-Carlo device
     realization; noise is drawn in the packed 6-D layout on both modes,
@@ -133,18 +135,26 @@ def cim_conv2d(
     (``variation_std=None`` falls back to ``cfg.variation_std``).
     """
     sigma = cfg.variation_std if variation_std is None else variation_std
-    if cfg.enabled and cfg.mode == "deploy":
-        return _forward_conv_deploy(x, params, cfg, stride, padding,
-                                    variation_key, sigma, compute_dtype)
+    if not cfg.enabled:
+        return _forward_conv_off(x, params, cfg, stride, padding,
+                                 None, None, compute_dtype)
+    from repro.api.backends import get_backend  # lazy: api builds on core
+    return get_backend(cfg.mode).conv(x, params, cfg, stride, padding,
+                                      variation_key, sigma, compute_dtype)
+
+
+def _forward_conv_off(x, params, cfg, stride, padding, variation_key,
+                      sigma, compute_dtype):
+    return jax.lax.conv_general_dilated(
+        x.astype(compute_dtype), params["w"].astype(compute_dtype),
+        (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _forward_conv_emulate(x, params, cfg, stride, padding, variation_key,
+                          sigma, compute_dtype):
     kh, kw, c_in, c_out = params["w"].shape
     dn = ("NHWC", "HWIO", "NHWC")
-    if not cfg.enabled or cfg.mode == "off":
-        return jax.lax.conv_general_dilated(
-            x.astype(compute_dtype), params["w"].astype(compute_dtype),
-            (stride, stride), padding, dimension_numbers=dn)
-    if cfg.mode != "emulate":
-        raise ValueError(f"unknown CIM mode {cfg.mode!r}")
-
     t, c_per_array = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows,
                                  cfg.array_cols, cfg.weight_bits, cfg.cell_bits)
     k_tiles = t.k_tiles
@@ -206,7 +216,7 @@ def cim_conv2d(
 
 def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
                          variation_key, sigma, compute_dtype):
-    """Inference from packed conv digit planes (see pack_deploy_conv).
+    """Inference from packed conv digit planes (see ``_pack_conv``).
 
     The conv geometry (kh, kw, c_per_array) is carried statically by the
     6-D digit-plane shape, so packed params are self-describing under jit.
@@ -257,9 +267,9 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
     return y.astype(compute_dtype)
 
 
-def pack_deploy_conv(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
-                     variation_key: Optional[jax.Array] = None,
-                     variation_std=None) -> Dict[str, jnp.ndarray]:
+def _pack_conv(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
+               variation_key: Optional[jax.Array] = None,
+               variation_std=None) -> Dict[str, jnp.ndarray]:
     """Convert trained emulate-mode conv params to the packed deploy form.
 
     Digit planes are stored 6-D — (S, k_tiles, kh, kw, c_per_array, C_out)
@@ -295,8 +305,8 @@ def pack_deploy_conv(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
     return out
 
 
-def calibrate_cim_conv(x, params, cfg: CIMConfig, *, stride: int = 1,
-                       padding: str = "SAME") -> Dict[str, jnp.ndarray]:
+def _calibrate_conv(x, params, cfg: CIMConfig, *, stride: int = 1,
+                    padding: str = "SAME") -> Dict[str, jnp.ndarray]:
     """One-batch LSQ-style calibration of s_a and s_p for a conv layer."""
     if not cfg.enabled:
         return params
@@ -348,3 +358,32 @@ def conv_dequant_muls(params, cfg: CIMConfig) -> int:
     t, _ = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
                        cfg.weight_bits, cfg.cell_bits)
     return t.dequant_muls(cfg.weight_granularity, cfg.psum_granularity)
+
+
+# ---------------------------------------------------------------------------
+# deprecated entry points (pre-`repro.api` surface)
+# ---------------------------------------------------------------------------
+
+def init_cim_conv(*args, **kw) -> Dict[str, jnp.ndarray]:
+    """Deprecated: use ``repro.api.init_conv`` / ``QuantConv2d.init``."""
+    _deprecated("init_cim_conv", "repro.api.init_conv")
+    return _init_conv(*args, **kw)
+
+
+def cim_conv2d(*args, **kw) -> jnp.ndarray:
+    """Deprecated: use ``repro.api.conv2d`` / ``QuantConv2d.__call__``."""
+    _deprecated("cim_conv2d", "repro.api.conv2d")
+    return _conv_forward(*args, **kw)
+
+
+def calibrate_cim_conv(*args, **kw) -> Dict[str, jnp.ndarray]:
+    """Deprecated: use ``repro.api.calibrate_conv``."""
+    _deprecated("calibrate_cim_conv", "repro.api.calibrate_conv")
+    return _calibrate_conv(*args, **kw)
+
+
+def pack_deploy_conv(*args, **kw) -> Dict[str, jnp.ndarray]:
+    """Deprecated: use ``repro.api.pack_conv`` / ``QuantConv2d.pack``
+    (which returns a versioned, saveable ``DeployArtifact``)."""
+    _deprecated("pack_deploy_conv", "repro.api.pack_conv")
+    return _pack_conv(*args, **kw)

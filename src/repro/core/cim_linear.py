@@ -3,7 +3,8 @@
 This is the paper's technique (§III-A, Eqs. 1-4) as a composable JAX module
 usable by any architecture whose FLOPs live in stored-weight matmuls.
 
-Three modes:
+Execution backends (``CIMConfig.mode`` resolves through the
+``repro.api.backends`` registry; the implementations live here):
 
   off      plain matmul in the compute dtype (full-precision baseline).
   emulate  paper-faithful QAT path: LSQ fake-quant of activations and
@@ -15,6 +16,7 @@ Three modes:
            the Pallas kernel (kernels/cim_matmul) from pre-quantized int8
            digit planes - bit-exact with ``emulate`` (tests assert), but
            weights live in HBM as int8 so the memory-roofline term drops.
+  ref      deploy arithmetic forced onto the jnp oracle (portable HLO).
 
 The partial-sum tensor in ``emulate`` has shape (..., n_split, k_tiles, N);
 the Pallas kernel never materializes it in HBM.
@@ -22,6 +24,7 @@ the Pallas kernel never materializes it in HBM.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -32,13 +35,35 @@ from .granularity import ArrayTiling, Granularity
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
 from .variation import perturb_digits, perturb_packed, variation_wanted
 
+# Execution-mode names CIMConfig accepts. The builtins are the modes the
+# core forwards implement; ``repro.api.backends.register_backend`` adds
+# custom backend names here so a registered backend is a valid
+# ``CIMConfig.mode`` and a typo fails at construction, not trace time.
+_BUILTIN_MODES = ("off", "emulate", "deploy", "ref")
+_KNOWN_MODES = set(_BUILTIN_MODES)
+
+_PACK_DTYPES = ("int8", "int4")
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead "
+        "(see the migration table in README.md).",
+        DeprecationWarning, stacklevel=3)
+
 
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
-    """Quantization + CIM-mapping configuration (paper Table II knobs)."""
+    """Quantization + CIM-mapping configuration (paper Table II knobs).
+
+    ``mode`` names the execution backend (``repro.api.backends``):
+    ``off`` | ``emulate`` | ``deploy`` | ``ref`` plus anything registered
+    via ``register_backend``. Unknown modes, granularities or pack dtypes
+    raise at construction — never silently at trace time.
+    """
 
     enabled: bool = False
-    mode: str = "emulate"            # off | emulate | deploy
+    mode: str = "emulate"            # backend name (see repro.api.backends)
     weight_bits: int = 4
     cell_bits: int = 2
     act_bits: int = 8
@@ -53,6 +78,32 @@ class CIMConfig:
     use_kernel: bool = True          # deploy: Pallas kernel vs jnp reference
     pack_dtype: str = "int8"         # deploy digit storage: int8 | int4
 
+    def __post_init__(self):
+        if self.mode not in _KNOWN_MODES:
+            raise ValueError(
+                f"unknown CIM mode {self.mode!r}; registered backends: "
+                f"{sorted(_KNOWN_MODES)}. Custom backends must be "
+                "registered via repro.api.backends.register_backend "
+                "before a CIMConfig can name them.")
+        if self.pack_dtype not in _PACK_DTYPES:
+            raise ValueError(f"unknown pack_dtype {self.pack_dtype!r}; "
+                             f"valid: {_PACK_DTYPES}")
+        for field in ("weight_granularity", "psum_granularity"):
+            val = getattr(self, field)
+            if not isinstance(val, Granularity):
+                try:
+                    coerced = Granularity(val)
+                except ValueError:
+                    raise ValueError(
+                        f"unknown {field} {val!r}; valid: "
+                        f"{[g.value for g in Granularity]}") from None
+                object.__setattr__(self, field, coerced)
+        for field in ("weight_bits", "cell_bits", "act_bits", "psum_bits",
+                      "array_rows", "array_cols"):
+            if int(getattr(self, field)) < 1:
+                raise ValueError(f"{field} must be >= 1, got "
+                                 f"{getattr(self, field)!r}")
+
     def tiling(self, k: int, n: int) -> ArrayTiling:
         return ArrayTiling(
             k=k, n=n,
@@ -61,6 +112,12 @@ class CIMConfig:
         )
 
     def replace(self, **kw) -> "CIMConfig":
+        fields = {f.name for f in dataclasses.fields(self)}
+        unknown = sorted(set(kw) - fields)
+        if unknown:
+            raise TypeError(
+                f"CIMConfig.replace: unknown field(s) {unknown}; "
+                f"valid fields: {sorted(fields)}")
         return dataclasses.replace(self, **kw)
 
     def store_dtype(self):
@@ -74,7 +131,7 @@ class CIMConfig:
 # parameter initialization
 # ---------------------------------------------------------------------------
 
-def init_cim_linear(
+def _init_linear(
     key: jax.Array, k: int, n: int, cfg: CIMConfig, w_init_scale: float | None = None,
     dtype=jnp.float32,
 ) -> Dict[str, jnp.ndarray]:
@@ -174,7 +231,7 @@ def _tile_digits(digits: jnp.ndarray, t: ArrayTiling) -> jnp.ndarray:
 # forward passes
 # ---------------------------------------------------------------------------
 
-def cim_linear(
+def _linear_forward(
     x: jnp.ndarray,
     params: Dict[str, jnp.ndarray],
     cfg: CIMConfig,
@@ -185,23 +242,28 @@ def cim_linear(
 ) -> jnp.ndarray:
     """Apply a CIM linear layer: x (..., K) @ w (K, N) -> (..., N).
 
+    ``cfg.mode`` resolves to a registered backend (repro.api.backends)
+    which owns the arithmetic; the builtins are ``off`` (plain matmul),
+    ``emulate`` (QAT fake-quant), ``deploy`` (packed Pallas kernel) and
+    ``ref`` (packed jnp oracle).
+
     ``variation_std`` overrides ``cfg.variation_std`` without rebuilding
     the (static) config — it may be a traced scalar, so a Monte-Carlo
     sweep can feed a sigma grid through one jitted function. Emulate and
     deploy draw cell noise in the same packed layout from the same key,
     so they agree bit-exactly under variation too (DESIGN.md §8).
     """
-    if not cfg.enabled or cfg.mode == "off":
-        w = params["w"].astype(compute_dtype)
-        return jnp.dot(x.astype(compute_dtype), w)
+    if not cfg.enabled:
+        return _forward_off(x, params, cfg, None, None, compute_dtype)
+    from repro.api.backends import get_backend  # lazy: api builds on core
     sigma = cfg.variation_std if variation_std is None else variation_std
-    if cfg.mode == "emulate":
-        return _forward_emulate(x, params, cfg, variation_key, sigma,
-                                compute_dtype)
-    if cfg.mode == "deploy":
-        return _forward_deploy(x, params, cfg, variation_key, sigma,
-                               compute_dtype)
-    raise ValueError(f"unknown CIM mode {cfg.mode!r}")
+    return get_backend(cfg.mode).linear(x, params, cfg, variation_key,
+                                        sigma, compute_dtype)
+
+
+def _forward_off(x, params, cfg, variation_key, sigma, compute_dtype):
+    w = params["w"].astype(compute_dtype)
+    return jnp.dot(x.astype(compute_dtype), w)
 
 
 def _forward_emulate(x, params, cfg, variation_key, sigma, compute_dtype):
@@ -241,7 +303,7 @@ def _forward_emulate(x, params, cfg, variation_key, sigma, compute_dtype):
 
 
 def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
-    """Inference from packed int digit planes (see pack_deploy). Cell
+    """Inference from packed int digit planes (see ``_pack_linear``). Cell
     noise is injected by the kernel wrapper on the packed planes — the
     int planes themselves are never re-packed per sample."""
     from repro.kernels import ops as kops  # lazy: avoids import cycle
@@ -284,9 +346,9 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
 # packing + calibration
 # ---------------------------------------------------------------------------
 
-def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
-                variation_key: Optional[jax.Array] = None,
-                variation_std=None) -> Dict[str, jnp.ndarray]:
+def _pack_linear(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
+                 variation_key: Optional[jax.Array] = None,
+                 variation_std=None) -> Dict[str, jnp.ndarray]:
     """Convert trained emulate-mode params into the packed deploy form.
 
     pack_dtype='int4' stores each digit plane as int4 (sign-magnitude
@@ -315,7 +377,7 @@ def pack_deploy(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
     return out
 
 
-def calibrate_cim(x, params, cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
+def _calibrate_linear(x, params, cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
     """One-batch calibration of s_a and s_p (LSQ-style init from stats)."""
     if not cfg.enabled:
         return params
@@ -347,3 +409,32 @@ def calibrate_cim(x, params, cfg: CIMConfig) -> Dict[str, jnp.ndarray]:
         s = mean_abs
     p["s_p"] = (2.0 * s / jnp.sqrt(float(max(qp_p, 1)))).astype(jnp.float32) + 1e-9
     return p
+
+
+# ---------------------------------------------------------------------------
+# deprecated entry points (pre-`repro.api` surface)
+# ---------------------------------------------------------------------------
+
+def init_cim_linear(*args, **kw) -> Dict[str, jnp.ndarray]:
+    """Deprecated: use ``repro.api.init_linear`` / ``QuantLinear.init``."""
+    _deprecated("init_cim_linear", "repro.api.init_linear")
+    return _init_linear(*args, **kw)
+
+
+def cim_linear(*args, **kw) -> jnp.ndarray:
+    """Deprecated: use ``repro.api.linear`` / ``QuantLinear.__call__``."""
+    _deprecated("cim_linear", "repro.api.linear")
+    return _linear_forward(*args, **kw)
+
+
+def calibrate_cim(*args, **kw) -> Dict[str, jnp.ndarray]:
+    """Deprecated: use ``repro.api.calibrate_linear``."""
+    _deprecated("calibrate_cim", "repro.api.calibrate_linear")
+    return _calibrate_linear(*args, **kw)
+
+
+def pack_deploy(*args, **kw) -> Dict[str, jnp.ndarray]:
+    """Deprecated: use ``repro.api.pack_linear`` / ``QuantLinear.pack``
+    (which returns a versioned, saveable ``DeployArtifact``)."""
+    _deprecated("pack_deploy", "repro.api.pack_linear")
+    return _pack_linear(*args, **kw)

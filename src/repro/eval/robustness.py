@@ -29,8 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cim_conv import cim_conv2d
-from repro.core.cim_linear import CIMConfig, cim_linear
+from repro.api import conv2d, linear
+from repro.core.cim_linear import CIMConfig
 from repro.models import resnet
 
 
@@ -85,17 +85,17 @@ def monte_carlo_linear_error(
     n_samples: int = 8,
 ) -> np.ndarray:
     """Relative deploy-output error per (sigma, sample), vs the clean
-    deploy output. ``packed`` comes from ``pack_deploy``; the evaluation
-    runs the deploy path of ``cim_linear`` (Pallas kernel when
+    deploy output. ``packed`` comes from ``repro.api.pack_linear``; the evaluation
+    runs the deploy path of ``repro.api.linear`` (Pallas kernel when
     ``cfg.use_kernel``). Returns (n_sigma, n_samples) float64."""
     dcfg = cfg.replace(mode="deploy")
 
     @jax.jit
     def _eval(k, sigma):
-        return cim_linear(x, packed, dcfg, variation_key=k,
+        return linear(x, packed, dcfg, variation_key=k,
                           variation_std=sigma, compute_dtype=jnp.float32)
 
-    y_clean = cim_linear(x, packed, dcfg, compute_dtype=jnp.float32)
+    y_clean = linear(x, packed, dcfg, compute_dtype=jnp.float32)
     denom = float(jnp.linalg.norm(y_clean)) + 1e-12
     out = np.zeros((len(sigmas), n_samples))
     for i in range(n_samples):
@@ -125,7 +125,7 @@ def monte_carlo_resnet(
     batch: int = 128,
 ) -> RobustnessSweep:
     """Sigma-grid Monte-Carlo accuracy/logit-error sweep of a (packed,
-    deploy-mode) ResNet. ``params`` is the ``resnet.pack_deploy`` tree and
+    deploy-mode) ResNet. ``params`` is the ``repro.api.pack_model`` tree and
     ``cfg.cim.mode`` should be "deploy" so the sweep exercises the fused
     Pallas kernels; the same call also accepts emulate params/cfg for
     cross-path comparisons."""
@@ -202,9 +202,9 @@ def per_layer_attribution(
         blk, conv = lname.split(".")
         node = params[blk][conv]
         tap = taps[lname]
-        y_clean = cim_conv2d(tap, node, cfg.cim, stride=stride,
+        y_clean = conv2d(tap, node, cfg.cim, stride=stride,
                              compute_dtype=jnp.float32)
-        y_noisy = cim_conv2d(tap, node, cfg.cim, stride=stride,
+        y_noisy = conv2d(tap, node, cfg.cim, stride=stride,
                              variation_key=vkeys[lname],
                              variation_std=jnp.float32(sigma),
                              compute_dtype=jnp.float32)

@@ -19,7 +19,7 @@ per-cell noise from a shared key; DESIGN.md §8.)
   1. ``ref.extract_conv_patches`` gathers each output position's
      receptive field ONCE per channel slice — (B, H', W', k_tiles, rows)
      with rows = kh*kw*c_per_array, row order (dh, dw, c) matching
-     ``pack_deploy_conv``'s digit layout. No n_split replication: the
+     ``repro.api.pack_conv``'s digit layout. No n_split replication: the
      kernel re-reads the same patch block per bit-split via its BlockSpec
      index map (the a-operand map ignores the split index).
   2. The spatial axis flattens to M = B*H'*W' and lowers onto the fused

@@ -95,7 +95,7 @@ def cim_conv(
 
     a_int:  (B, H, W, C_in) integer-valued activation codes
     digits: (S, k_tiles, kh*kw*c_per_array, C_out) cell planes in the
-            stretched-kernel row layout (see pack_deploy_conv)
+            stretched-kernel row layout (see repro.api.pack_conv)
     s_p:    (S, k_tiles, C_out) ADC scales
     deq:    (S, k_tiles, C_out) fused dequant scales
     variation_key/std: optional log-normal cell-noise realization

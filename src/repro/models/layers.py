@@ -40,11 +40,12 @@ def conv_specs(
     """ParamSpecs for a CIM conv layer (HWIO weight + paper scale factors).
 
     In deploy mode the weight exists ONLY as the packed 6-D digit planes
-    the fused Pallas conv kernel consumes (see pack_deploy_conv); emulate
+    the fused Pallas conv kernel consumes (see repro.api.pack_conv); emulate
     keeps the float HWIO weight for QAT."""
+    from repro.api.backends import is_packed
     from repro.core.granularity import conv_tiling
 
-    if cim is not None and cim.enabled and cim.mode == "deploy":
+    if is_packed(cim):
         t, cpa = conv_tiling(kh, kw, c_in, c_out, cim.array_rows,
                              cim.array_cols, cim.weight_bits, cim.cell_bits)
         specs = {"w_digits": ParamSpec(
@@ -92,11 +93,11 @@ def apply_conv(
             x.astype(compute_dtype), params["w"].astype(compute_dtype),
             (stride, stride), padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    from repro.core.cim_conv import cim_conv2d
-    return cim_conv2d(x, params, cim, stride=stride, padding=padding,
-                      variation_key=variation_key,
-                      variation_std=variation_std,
-                      compute_dtype=compute_dtype)
+    from repro.api import conv2d
+    return conv2d(x, params, cim, stride=stride, padding=padding,
+                  variation_key=variation_key,
+                  variation_std=variation_std,
+                  compute_dtype=compute_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -630,14 +631,15 @@ def _expert_matmul(p: Dict, nm: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.nd
     if not cfg.cim.enabled:
         return jnp.einsum("eck,ekn->ecn", x, p[nm].astype(cdt(cfg)),
                           preferred_element_type=cdt(cfg))
-    from repro.core.cim_linear import cim_linear
+    from repro.api import linear
+    from repro.api.backends import is_packed
     # expert weights keep the emulate layout (deploy packing is a dense-
     # linear feature; MoE experts quantize identically either way)
-    ecfg = cfg.cim if cfg.cim.mode != "deploy" else cfg.cim.replace(
-        mode="emulate")
+    ecfg = (cfg.cim if not is_packed(cfg.cim)
+            else cfg.cim.replace(mode="emulate"))
     def one(xe, we, s_w, s_p, s_a):
-        return cim_linear(xe, {"w": we, "s_w": s_w, "s_p": s_p, "s_a": s_a},
-                          ecfg, compute_dtype=cdt(cfg))
+        return linear(xe, {"w": we, "s_w": s_w, "s_p": s_p, "s_a": s_a},
+                      ecfg, compute_dtype=cdt(cfg))
     return jax.vmap(one)(x, p[nm].astype(jnp.float32), p[f"{nm}_s_w"],
                          p[f"{nm}_s_p"], p[f"{nm}_s_a"])
 
@@ -767,12 +769,13 @@ def _apply_moe_ep(p: Dict, x: jnp.ndarray, cfg: ModelConfig, mesh):
             if not cfg.cim.enabled:
                 return jnp.einsum("eck,ekn->ecn", z, w.astype(cdt(cfg)),
                                   preferred_element_type=cdt(cfg))
-            from repro.core.cim_linear import cim_linear
-            ecfg = (cfg.cim if cfg.cim.mode != "deploy"
+            from repro.api import linear
+            from repro.api.backends import is_packed
+            ecfg = (cfg.cim if not is_packed(cfg.cim)
                     else cfg.cim.replace(mode="emulate"))
             s_w, s_p, s_a = (extra[f"{nm}_s_w"], extra[f"{nm}_s_p"],
                              extra[f"{nm}_s_a"])
-            return jax.vmap(lambda ze, we, a_, b_, c_: cim_linear(
+            return jax.vmap(lambda ze, we, a_, b_, c_: linear(
                 ze, {"w": we, "s_w": a_, "s_p": b_, "s_a": c_}, ecfg,
                 compute_dtype=cdt(cfg)))(z, w.astype(jnp.float32), s_w,
                                          s_p, s_a)

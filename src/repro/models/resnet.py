@@ -1,11 +1,12 @@
 """ResNet-20 (CIFAR) / ResNet-18 (ImageNet) on the CIM convolution
 framework — the paper's own evaluation architectures (Table II).
 
-Every conv routes through ``cim_conv2d`` (stretched-kernel tiling + group
-conv + bit-split + column-wise W/psum quantization). Following common CIM
-QAT practice (and the paper's settings), the first conv and the final FC
-layer stay full-precision. BatchNorm carries explicit running statistics
-in a separate ``state`` tree (functional; trainer threads it).
+Every conv routes through the CIM conv forward (``repro.api.conv2d``:
+stretched-kernel tiling + group conv + bit-split + column-wise W/psum
+quantization). Following common CIM QAT practice (and the paper's
+settings), the first conv and the final FC layer stay full-precision.
+BatchNorm carries explicit running statistics in a separate ``state``
+tree (functional; trainer threads it).
 """
 from __future__ import annotations
 
@@ -15,8 +16,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cim_conv import cim_conv2d, init_cim_conv, pack_deploy_conv
-from repro.core.cim_linear import CIMConfig
+from repro.core.cim_conv import _conv_forward, _init_conv
+from repro.core.cim_linear import CIMConfig, _deprecated
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +67,7 @@ def init(key: jax.Array, cfg: ResNetConfig):
     c_in = 3
     # stem conv: full precision (standard CIM QAT practice)
     fp = cfg.cim.replace(enabled=False)
-    params["stem"] = init_cim_conv(next(keys), 3, 3, c_in, widths[0], fp)
+    params["stem"] = _init_conv(next(keys), 3, 3, c_in, widths[0], fp)
     params["stem_bn"], state["stem_bn"] = _bn_init(widths[0])
     c_in = widths[0]
     for si, w in enumerate(widths):
@@ -74,14 +75,14 @@ def init(key: jax.Array, cfg: ResNetConfig):
             name = f"s{si}b{bi}"
             stride = 2 if (bi == 0 and si > 0) else 1
             blk: Dict = {
-                "conv1": init_cim_conv(next(keys), 3, 3, c_in, w, cfg.cim),
-                "conv2": init_cim_conv(next(keys), 3, 3, w, w, cfg.cim),
+                "conv1": _init_conv(next(keys), 3, 3, c_in, w, cfg.cim),
+                "conv2": _init_conv(next(keys), 3, 3, w, w, cfg.cim),
             }
             bst: Dict = {}
             blk["bn1"], bst["bn1"] = _bn_init(w)
             blk["bn2"], bst["bn2"] = _bn_init(w)
             if stride != 1 or c_in != w:
-                blk["proj"] = init_cim_conv(next(keys), 1, 1, c_in, w, cfg.cim)
+                blk["proj"] = _init_conv(next(keys), 1, 1, c_in, w, cfg.cim)
                 blk["bn_p"], bst["bn_p"] = _bn_init(w)
             params[name] = blk
             state[name] = bst
@@ -95,21 +96,13 @@ def init(key: jax.Array, cfg: ResNetConfig):
 
 
 def pack_deploy(params: Dict, cfg: ResNetConfig) -> Dict:
-    """Convert a trained (emulate-mode) ResNet param tree to the packed
-    conv deploy form: every CIM conv becomes int digit planes for the
-    fused Pallas kernel; the full-precision stem, BN and FC pass through.
-    Run ``forward`` with ``cfg.cim.mode == "deploy"`` afterwards."""
-    out: Dict = {}
-    for name, val in params.items():
-        if name in ("stem", "fc") or name.endswith("_bn"):
-            out[name] = val
-            continue
-        blk = {}
-        for k, v in val.items():
-            blk[k] = (pack_deploy_conv(v, cfg.cim)
-                      if k in ("conv1", "conv2", "proj") else v)
-        out[name] = blk
-    return out
+    """Deprecated: use ``repro.api.pack_model(params, cfg.cim)`` (or
+    ``repro.api.model_artifact`` for a saveable ``DeployArtifact``). The
+    generic tree walk packs every CIM conv to int digit planes; the
+    full-precision stem, BN and FC pass through unchanged."""
+    _deprecated("models.resnet.pack_deploy", "repro.api.pack_model")
+    from repro.api import pack_model
+    return pack_model(params, cfg.cim)
 
 
 def conv_layer_names(cfg: ResNetConfig) -> Tuple[Tuple[str, int], ...]:
@@ -161,7 +154,7 @@ def forward(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig,
     new_state: Dict = {}
     taps: Dict[str, jnp.ndarray] = {}
     fp = cfg.cim.replace(enabled=False)
-    h = cim_conv2d(x, params["stem"], fp, compute_dtype=jnp.float32)
+    h = _conv_forward(x, params["stem"], fp, compute_dtype=jnp.float32)
     h, new_state["stem_bn"] = _bn_apply(params["stem_bn"], state["stem_bn"],
                                         h, train, cfg.bn_momentum)
     h = jax.nn.relu(h)
@@ -174,28 +167,28 @@ def forward(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig,
             stride = 2 if (bi == 0 and si > 0) else 1
             if return_taps:
                 taps[f"{name}.conv1"] = h
-            y = cim_conv2d(h, blk["conv1"], cfg.cim, stride=stride,
-                           variation_key=vkeys.get(f"{name}.conv1"),
-                           variation_std=variation_std,
-                           compute_dtype=jnp.float32)
+            y = _conv_forward(h, blk["conv1"], cfg.cim, stride=stride,
+                              variation_key=vkeys.get(f"{name}.conv1"),
+                              variation_std=variation_std,
+                              compute_dtype=jnp.float32)
             y, nst["bn1"] = _bn_apply(blk["bn1"], bst["bn1"], y, train,
                                       cfg.bn_momentum)
             y = jax.nn.relu(y)
             if return_taps:
                 taps[f"{name}.conv2"] = y
-            y = cim_conv2d(y, blk["conv2"], cfg.cim,
-                           variation_key=vkeys.get(f"{name}.conv2"),
-                           variation_std=variation_std,
-                           compute_dtype=jnp.float32)
+            y = _conv_forward(y, blk["conv2"], cfg.cim,
+                              variation_key=vkeys.get(f"{name}.conv2"),
+                              variation_std=variation_std,
+                              compute_dtype=jnp.float32)
             y, nst["bn2"] = _bn_apply(blk["bn2"], bst["bn2"], y, train,
                                       cfg.bn_momentum)
             if "proj" in blk:
                 if return_taps:
                     taps[f"{name}.proj"] = h
-                sc = cim_conv2d(h, blk["proj"], cfg.cim, stride=stride,
-                                variation_key=vkeys.get(f"{name}.proj"),
-                                variation_std=variation_std,
-                                compute_dtype=jnp.float32)
+                sc = _conv_forward(h, blk["proj"], cfg.cim, stride=stride,
+                                   variation_key=vkeys.get(f"{name}.proj"),
+                                   variation_std=variation_std,
+                                   compute_dtype=jnp.float32)
                 sc, nst["bn_p"] = _bn_apply(blk["bn_p"], bst["bn_p"], sc,
                                             train, cfg.bn_momentum)
             else:
@@ -212,12 +205,12 @@ def forward(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig,
 def calibrate(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig):
     """Run one forward pass, calibrating every CIM conv's s_a / s_p from
     the activations that actually reach it."""
-    from repro.core.cim_conv import calibrate_cim_conv
+    from repro.core.cim_conv import _calibrate_conv
     widths = cfg.widths if cfg.depth == 20 else (64, 128, 256, 512)
     nb = cfg.blocks_per_stage
     fp = cfg.cim.replace(enabled=False)
     p = {k: (dict(v) if isinstance(v, dict) else v) for k, v in params.items()}
-    h = cim_conv2d(x, p["stem"], fp, compute_dtype=jnp.float32)
+    h = _conv_forward(x, p["stem"], fp, compute_dtype=jnp.float32)
     h, _ = _bn_apply(p["stem_bn"], state["stem_bn"], h, True, cfg.bn_momentum)
     h = jax.nn.relu(h)
     for si, w in enumerate(widths):
@@ -226,20 +219,20 @@ def calibrate(params: Dict, state: Dict, x: jnp.ndarray, cfg: ResNetConfig):
             blk = dict(p[name])
             bst = state[name]
             stride = 2 if (bi == 0 and si > 0) else 1
-            blk["conv1"] = calibrate_cim_conv(h, blk["conv1"], cfg.cim,
-                                              stride=stride)
-            y = cim_conv2d(h, blk["conv1"], cfg.cim, stride=stride,
-                           compute_dtype=jnp.float32)
+            blk["conv1"] = _calibrate_conv(h, blk["conv1"], cfg.cim,
+                                           stride=stride)
+            y = _conv_forward(h, blk["conv1"], cfg.cim, stride=stride,
+                              compute_dtype=jnp.float32)
             y, _ = _bn_apply(blk["bn1"], bst["bn1"], y, True, cfg.bn_momentum)
             y = jax.nn.relu(y)
-            blk["conv2"] = calibrate_cim_conv(y, blk["conv2"], cfg.cim)
-            y = cim_conv2d(y, blk["conv2"], cfg.cim, compute_dtype=jnp.float32)
+            blk["conv2"] = _calibrate_conv(y, blk["conv2"], cfg.cim)
+            y = _conv_forward(y, blk["conv2"], cfg.cim, compute_dtype=jnp.float32)
             y, _ = _bn_apply(blk["bn2"], bst["bn2"], y, True, cfg.bn_momentum)
             if "proj" in blk:
-                blk["proj"] = calibrate_cim_conv(h, blk["proj"], cfg.cim,
-                                                 stride=stride)
-                sc = cim_conv2d(h, blk["proj"], cfg.cim, stride=stride,
-                                compute_dtype=jnp.float32)
+                blk["proj"] = _calibrate_conv(h, blk["proj"], cfg.cim,
+                                              stride=stride)
+                sc = _conv_forward(h, blk["proj"], cfg.cim, stride=stride,
+                                   compute_dtype=jnp.float32)
                 sc, _ = _bn_apply(blk["bn_p"], bst["bn_p"], sc, True,
                                   cfg.bn_momentum)
             else:

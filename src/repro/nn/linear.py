@@ -13,7 +13,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.cim_linear import CIMConfig, cim_linear
+from repro.core.cim_linear import CIMConfig, _linear_forward
 from .module import ParamSpec
 
 
@@ -27,8 +27,9 @@ def linear_specs(
     dtype=jnp.float32,
     init: str | None = None,
 ) -> Dict[str, ParamSpec]:
+    from repro.api.backends import is_packed  # lazy: api builds on nn
     w_init = init or "fan_in:1.0"
-    if cim is not None and cim.enabled and cim.mode == "deploy":
+    if is_packed(cim):
         # packed-int inference: weights live ONLY as digit planes
         t = cim.tiling(k, n)
         specs = {"w_digits": ParamSpec(
@@ -62,6 +63,6 @@ def apply_linear(
     if cim is None or not cim.enabled:
         return jnp.dot(x.astype(compute_dtype),
                        params["w"].astype(compute_dtype))
-    return cim_linear(x, params, cim, variation_key=variation_key,
-                      variation_std=variation_std,
-                      compute_dtype=compute_dtype)
+    return _linear_forward(x, params, cim, variation_key=variation_key,
+                           variation_std=variation_std,
+                           compute_dtype=compute_dtype)

@@ -1,3 +1,5 @@
-from .engine import ServingEngine, make_decode_step, make_prefill
+from .engine import (ServingEngine, engine_from_artifact, make_decode_step,
+                     make_prefill)
 
-__all__ = ["ServingEngine", "make_decode_step", "make_prefill"]
+__all__ = ["ServingEngine", "engine_from_artifact", "make_decode_step",
+           "make_prefill"]

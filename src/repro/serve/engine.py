@@ -12,6 +12,7 @@ SSM families carry O(1) state anyway).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -20,6 +21,29 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.registry import ModelFns
+
+
+def engine_from_artifact(artifact, cfg: ModelConfig,
+                         **engine_kw) -> "ServingEngine":
+    """Build a ``ServingEngine`` that serves a packed ``DeployArtifact``
+    on its packed backend (the fused Pallas deploy path).
+
+    ``artifact`` is a ``repro.api.DeployArtifact`` of kind "model" (or a
+    path to one on disk); ``cfg`` is the architecture's ModelConfig — its
+    ``cim`` field is replaced by the artifact's pinned deploy config, so
+    the engine runs exactly the quantization state that was packed, and
+    ``linear_specs``-style callers see a packed backend.
+    """
+    from repro.api import DeployArtifact
+    from repro.models.registry import get_model
+    if isinstance(artifact, (str, os.PathLike)):
+        artifact = DeployArtifact.load(os.fspath(artifact))
+    if artifact.kind != "model":
+        raise ValueError(f"engine_from_artifact needs a 'model' artifact, "
+                         f"got kind={artifact.kind!r}")
+    serve_cfg = dataclasses.replace(cfg, cim=artifact.config)
+    model = get_model(serve_cfg)
+    return ServingEngine(model, serve_cfg, artifact.params, **engine_kw)
 
 
 def make_prefill(model: ModelFns, cfg: ModelConfig):

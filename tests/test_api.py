@@ -1,0 +1,407 @@
+"""Unified lifecycle API contracts: typed handles, backend registry,
+versioned DeployArtifact save/load round-trips (bit-exact), and the
+deprecation shims over the pre-API entry points."""
+import dataclasses
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (Backend, DeployArtifact, QuantConv2d, QuantLinear,
+                       Variation, get_backend, model_artifact, pack_model,
+                       register_backend, registered_backends)
+from repro.core import CIMConfig, Granularity
+
+
+def _cfg(**kw):
+    base = dict(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=4, array_rows=32, array_cols=32)
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def _linear_handle(cfg, k=96, n=40, batch=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, k)) * 0.5
+    h = QuantLinear(k, n, cfg).init(key).calibrate(x)
+    return h, x
+
+
+def _conv_handle(cfg, stride=1, padding="SAME", c_in=12, c_out=20, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                      (2, 10, 10, c_in)))
+    h = QuantConv2d(3, 3, c_in, c_out, cfg, stride=stride,
+                    padding=padding).init(key).calibrate(x)
+    return h, x
+
+
+def _assert_tree_bit_exact(a, b):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# artifact save -> load -> bit-exact forward round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pack_dtype", ["int8", "int4"])
+def test_linear_artifact_roundtrip_bit_exact(tmp_path, pack_dtype):
+    h, x = _linear_handle(_cfg(pack_dtype=pack_dtype))
+    art = h.pack()
+    art.save(str(tmp_path))
+    loaded = DeployArtifact.load(str(tmp_path))
+    assert loaded.layout_version == art.layout_version
+    assert loaded.config == art.config
+    assert get_backend(loaded.config.mode).packed
+    _assert_tree_bit_exact(art.params, loaded.params)
+    y_mem = QuantLinear.from_artifact(art)(x)
+    y_disk = QuantLinear.from_artifact(loaded)(x)
+    np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_disk))
+
+
+@pytest.mark.parametrize("pack_dtype,stride,padding", [
+    ("int8", 1, "SAME"), ("int8", 2, "VALID"), ("int4", 2, "SAME")])
+def test_conv_artifact_roundtrip_bit_exact(tmp_path, pack_dtype, stride,
+                                           padding):
+    h, x = _conv_handle(_cfg(act_signed=False, pack_dtype=pack_dtype),
+                        stride=stride, padding=padding)
+    art = h.pack()
+    art.save(str(tmp_path))
+    loaded = DeployArtifact.load(str(tmp_path))
+    if pack_dtype == "int4":
+        assert str(np.asarray(loaded.params["w_digits"]).dtype) == "int4"
+    _assert_tree_bit_exact(art.params, loaded.params)
+    served = QuantConv2d.from_artifact(loaded)
+    assert (served.stride, served.padding) == (stride, padding)
+    y_mem = QuantConv2d.from_artifact(art)(x)
+    np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(served(x)))
+
+
+@pytest.mark.parametrize("kind", ["linear", "conv"])
+def test_variation_baked_pack_roundtrip(tmp_path, kind):
+    vkey = jax.random.PRNGKey(7)
+    if kind == "linear":
+        h, x = _linear_handle(_cfg())
+        cls = QuantLinear
+    else:
+        h, x = _conv_handle(_cfg(act_signed=False))
+        cls = QuantConv2d
+    art = h.pack(variation=Variation(vkey, 0.25))
+    clean = h.pack()
+    # baking really perturbed the planes (float realization)
+    assert np.asarray(art.params["w_digits"]).dtype == np.float32
+    assert not np.array_equal(np.asarray(art.params["w_digits"]),
+                              np.asarray(clean.params["w_digits"]))
+    art.save(str(tmp_path))
+    loaded = DeployArtifact.load(str(tmp_path))
+    _assert_tree_bit_exact(art.params, loaded.params)
+    np.testing.assert_array_equal(np.asarray(cls.from_artifact(art)(x)),
+                                  np.asarray(cls.from_artifact(loaded)(x)))
+
+
+def test_model_artifact_roundtrip_resnet(tmp_path):
+    from repro.models import resnet
+    cim = _cfg(act_signed=False)
+    cfg = resnet.ResNetConfig(name="tiny", depth=20, n_classes=10,
+                              widths=(8, 16), in_hw=8, cim=cim)
+    params, state = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    params = resnet.calibrate(params, state, x, cfg)
+    art = model_artifact(params, cim, meta={"arch": "resnet20-tiny"})
+    assert art.kind == "model"
+    art.save(str(tmp_path))
+    loaded = DeployArtifact.load(str(tmp_path))
+    assert loaded.meta["arch"] == "resnet20-tiny"
+    _assert_tree_bit_exact(art.params, loaded.params)
+    dcfg = dataclasses.replace(cfg, cim=loaded.config)
+    y_mem, _ = resnet.forward(art.params, state, x, dcfg, train=False)
+    y_disk, _ = resnet.forward(loaded.params, state, x, dcfg, train=False)
+    np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_disk))
+    # the fp stem / fc / bn passed through the pack untouched
+    _assert_tree_bit_exact(art.params["stem"], params["stem"])
+    _assert_tree_bit_exact(art.params["fc"], params["fc"])
+
+
+def test_pack_model_recurses_into_list_nodes(tmp_path):
+    """Trees rebuilt by checkpoint.restore_tree may contain list nodes;
+    CIM layers inside them must be packed, not silently passed through.
+    Tuple nodes are normalized to lists so the in-memory pack and a
+    loaded artifact are STRUCTURE-exact, not just leaf-exact."""
+    cfg = _cfg()
+    h, x = _linear_handle(cfg)
+    tree = {"blocks": ({"fc": h.params}, {"fc": h.params}), "bias": x[:1]}
+    packed = pack_model(tree, cfg)
+    assert isinstance(packed["blocks"], list)
+    for blk in packed["blocks"]:
+        assert "w_digits" in blk["fc"] and "w" not in blk["fc"]
+    _assert_tree_bit_exact(packed["blocks"][0]["fc"],
+                           api.pack_linear(h.params, cfg))
+    art = model_artifact(tree, cfg)
+    art.save(str(tmp_path))
+    loaded = DeployArtifact.load(str(tmp_path))
+    assert (jax.tree.structure(art.params)
+            == jax.tree.structure(loaded.params))
+    _assert_tree_bit_exact(art.params, loaded.params)
+
+
+def test_pack_model_carries_extra_layer_keys():
+    """A CIM-layer node's non-quartet keys (e.g. a bias) must survive
+    packing, for both the flat and the stacked (vmapped) paths."""
+    cfg = _cfg()
+    h, _ = _linear_handle(cfg)
+    bias = jnp.arange(h.n, dtype=jnp.float32)
+    packed = pack_model({"fc": {**h.params, "b": bias}}, cfg)
+    assert "w_digits" in packed["fc"]
+    np.testing.assert_array_equal(np.asarray(packed["fc"]["b"]),
+                                  np.asarray(bias))
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), h.params)
+    sb = jnp.stack([bias, bias])
+    packed = pack_model({"fc": {**stacked, "b": sb}}, cfg)
+    assert packed["fc"]["w_digits"].shape[0] == 2
+    np.testing.assert_array_equal(np.asarray(packed["fc"]["b"]),
+                                  np.asarray(sb))
+
+
+def test_artifact_overwrite_never_pairs_new_params_with_stale_header(
+        tmp_path):
+    """Re-saving into an existing artifact dir removes the stale header
+    before the new params land, so a mid-overwrite crash yields a loudly
+    incomplete artifact rather than a silent config/params mismatch."""
+    h, x = _linear_handle(_cfg())
+    h.pack().save(str(tmp_path))
+    h4 = QuantLinear(h.k, h.n, h.cfg.replace(pack_dtype="int4"),
+                     params=h.params)
+    h4.pack().save(str(tmp_path))
+    loaded = DeployArtifact.load(str(tmp_path))
+    assert loaded.config.pack_dtype == "int4"
+    assert str(np.asarray(loaded.params["w_digits"]).dtype) == "int4"
+    np.testing.assert_array_equal(
+        np.asarray(QuantLinear.from_artifact(loaded)(x)),
+        np.asarray(QuantLinear.from_artifact(h4.pack())(x)))
+
+
+def test_restore_tree_non_dict_roots(tmp_path):
+    from repro.checkpoint import restore_tree, save
+    save(str(tmp_path / "lst"), 0, [np.ones((2,), np.float32),
+                                    np.zeros((3,), np.float32)])
+    out = restore_tree(str(tmp_path / "lst"), step=0)
+    assert isinstance(out, list) and len(out) == 2
+    save(str(tmp_path / "leaf"), 0, np.arange(4, dtype=np.int32))
+    leaf = restore_tree(str(tmp_path / "leaf"), step=0)
+    np.testing.assert_array_equal(leaf, np.arange(4, dtype=np.int32))
+
+
+def test_restore_tree_keeps_dunder_keyed_dicts(tmp_path):
+    from repro.checkpoint import restore_tree, save
+    tree = {"x": {"__tag": np.ones((2,), np.float32)}}
+    save(str(tmp_path), 0, tree)
+    out = restore_tree(str(tmp_path), step=0)
+    assert isinstance(out["x"], dict) and "__tag" in out["x"]
+    _assert_tree_bit_exact(tree, out)
+    # numeric '__<i>' dict keys collide with the list encoding and are
+    # rejected loudly at save time instead of corrupting restore_tree
+    with pytest.raises(ValueError, match="reserved list encoding"):
+        save(str(tmp_path), 1, {"y": {"__0": np.ones((1,), np.float32)}})
+
+
+def test_artifact_version_gate(tmp_path):
+    h, _ = _linear_handle(_cfg())
+    h.pack().save(str(tmp_path))
+    jpath = tmp_path / "artifact.json"
+    head = json.loads(jpath.read_text())
+    head["layout_version"] = api.ARTIFACT_LAYOUT_VERSION + 1
+    jpath.write_text(json.dumps(head))
+    with pytest.raises(ValueError, match="layout_version"):
+        DeployArtifact.load(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        DeployArtifact.load(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# backend registry dispatch
+# ---------------------------------------------------------------------------
+
+def test_backend_equivalence_linear():
+    h, x = _linear_handle(_cfg())
+    y_em = h(x)
+    served = QuantLinear.from_artifact(h.pack())
+    y_deploy = served(x)
+    y_ref = served.with_backend("ref")(x)
+    np.testing.assert_allclose(np.asarray(y_em), np.asarray(y_deploy),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_deploy), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_backend_equivalence_conv():
+    h, x = _conv_handle(_cfg(act_signed=False), stride=2)
+    y_em = h(x)
+    served = QuantConv2d.from_artifact(h.pack())
+    y_deploy = served(x)
+    y_ref = served.with_backend("ref")(x)
+    np.testing.assert_allclose(np.asarray(y_em), np.asarray(y_deploy),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_deploy), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_builtin_backends_registered():
+    assert set(registered_backends()) >= {"off", "emulate", "deploy", "ref"}
+    assert not get_backend("emulate").packed
+    assert get_backend("deploy").packed and get_backend("ref").packed
+
+
+def test_register_custom_backend_dispatches():
+    deploy = get_backend("deploy")
+    name = "test-doubling-deploy"
+    if name not in registered_backends():
+        register_backend(Backend(
+            name=name,
+            linear=lambda *a: 2.0 * deploy.linear(*a),
+            conv=lambda *a: 2.0 * deploy.conv(*a),
+            packed=True, description="test backend"))
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(get_backend(name))
+    h, x = _linear_handle(_cfg())
+    served = QuantLinear.from_artifact(h.pack())
+    np.testing.assert_allclose(np.asarray(served.with_backend(name)(x)),
+                               2.0 * np.asarray(served(x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# config validation (fail loudly at construction)
+# ---------------------------------------------------------------------------
+
+def test_unknown_mode_raises_at_construction():
+    with pytest.raises(ValueError, match="unknown CIM mode"):
+        CIMConfig(mode="depoly")
+    with pytest.raises(ValueError, match="unknown CIM mode"):
+        _cfg().replace(mode="deplyo")
+
+
+def test_replace_rejects_unknown_fields():
+    with pytest.raises(TypeError, match="unknown field"):
+        _cfg().replace(weight_bit=3)
+
+
+def test_unknown_granularity_and_pack_dtype_raise():
+    with pytest.raises(ValueError, match="weight_granularity"):
+        CIMConfig(weight_granularity="colum")
+    with pytest.raises(ValueError, match="pack_dtype"):
+        CIMConfig(pack_dtype="int2")
+    # string granularities coerce to the enum
+    assert (CIMConfig(weight_granularity="array").weight_granularity
+            is Granularity.ARRAY)
+
+
+def test_handle_guards():
+    h = QuantLinear(8, 4, _cfg())
+    with pytest.raises(ValueError, match="no params"):
+        h(jnp.zeros((2, 8)))
+    hc, _ = _conv_handle(_cfg(act_signed=False))
+    with pytest.raises(ValueError, match="'linear' artifact"):
+        QuantLinear.from_artifact(hc.pack())
+
+
+def test_pack_and_calibrate_require_trainable_params():
+    h, x = _linear_handle(_cfg())
+    served = QuantLinear.from_artifact(h.pack())
+    with pytest.raises(ValueError, match="packed digit"):
+        served.pack()
+    with pytest.raises(ValueError, match="packed digit"):
+        served.calibrate(x)
+
+
+def test_with_backend_checks_params_layout():
+    h, x = _linear_handle(_cfg())
+    served = QuantLinear.from_artifact(h.pack())
+    with pytest.raises(ValueError, match="trainable float weights"):
+        served.with_backend("emulate")
+    with pytest.raises(ValueError, match="packed digit planes"):
+        h.with_backend("deploy")
+    assert h.with_backend("off")(x).shape == (x.shape[0], h.n)
+    assert served.with_backend("ref")(x).shape == (x.shape[0], h.n)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: still functional, and they warn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings("error::DeprecationWarning")
+def test_legacy_linear_shims_warn_and_match():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 48)) * 0.5
+    from repro.core import (calibrate_cim, cim_linear, init_cim_linear,
+                            pack_deploy)
+    with pytest.warns(DeprecationWarning, match="init_cim_linear"):
+        p_old = init_cim_linear(key, 48, 16, cfg)
+    p_new = api.init_linear(key, 48, 16, cfg)
+    _assert_tree_bit_exact(p_old, p_new)
+    with pytest.warns(DeprecationWarning, match="calibrate_cim"):
+        p_old = calibrate_cim(x, p_old, cfg)
+    p_new = api.calibrate_linear(x, p_new, cfg)
+    with pytest.warns(DeprecationWarning, match="cim_linear"):
+        y_old = cim_linear(x, p_old, cfg, compute_dtype=jnp.float32)
+    y_new = api.linear(x, p_new, cfg, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+    with pytest.warns(DeprecationWarning, match="pack_deploy"):
+        d_old = pack_deploy(p_old, cfg)
+    _assert_tree_bit_exact(d_old, api.pack_linear(p_new, cfg))
+
+
+@pytest.mark.filterwarnings("error::DeprecationWarning")
+def test_legacy_conv_and_resnet_shims_warn_and_match():
+    cfg = _cfg(act_signed=False)
+    key = jax.random.PRNGKey(0)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 6)))
+    from repro.core import (calibrate_cim_conv, cim_conv2d, init_cim_conv,
+                            pack_deploy_conv)
+    with pytest.warns(DeprecationWarning, match="init_cim_conv"):
+        p_old = init_cim_conv(key, 3, 3, 6, 10, cfg)
+    p_new = api.init_conv(key, 3, 3, 6, 10, cfg)
+    _assert_tree_bit_exact(p_old, p_new)
+    with pytest.warns(DeprecationWarning, match="calibrate_cim_conv"):
+        p_old = calibrate_cim_conv(x, p_old, cfg)
+    p_new = api.calibrate_conv(x, p_new, cfg)
+    with pytest.warns(DeprecationWarning, match="cim_conv2d"):
+        y_old = cim_conv2d(x, p_old, cfg, compute_dtype=jnp.float32)
+    y_new = api.conv2d(x, p_new, cfg, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+    with pytest.warns(DeprecationWarning, match="pack_deploy_conv"):
+        d_old = pack_deploy_conv(p_old, cfg)
+    _assert_tree_bit_exact(d_old, api.pack_conv(p_new, cfg))
+
+    from repro.models import resnet
+    rcfg = resnet.ResNetConfig(name="tiny", depth=20, n_classes=10,
+                               widths=(8, 16), in_hw=8, cim=cfg)
+    params, _ = resnet.init(jax.random.PRNGKey(2), rcfg)
+    with pytest.warns(DeprecationWarning, match="pack_deploy"):
+        legacy = resnet.pack_deploy(params, rcfg)
+    _assert_tree_bit_exact(legacy, pack_model(params, cfg))
+
+
+# ---------------------------------------------------------------------------
+# template-free checkpoint restore (artifact substrate)
+# ---------------------------------------------------------------------------
+
+def test_restore_tree_rebuilds_structure(tmp_path):
+    from repro.checkpoint import restore_tree, save
+    tree = {"a": {"b": np.arange(6, dtype=np.int32).reshape(2, 3)},
+            "c": [np.ones((2,), np.float32), np.zeros((1,), np.float32)],
+            "d": np.asarray(jnp.bfloat16(1.5))}
+    save(str(tmp_path), 3, tree)
+    out = restore_tree(str(tmp_path), step=3)
+    assert isinstance(out["c"], list) and len(out["c"]) == 2
+    _assert_tree_bit_exact(tree, out)

@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CIMConfig, Granularity, calibrate_cim_conv,
-                        cim_conv2d, conv_dequant_muls, conv_tiling,
-                        init_cim_conv)
+from repro.api import calibrate_conv as calibrate_cim_conv
+from repro.api import conv2d as cim_conv2d
+from repro.api import init_conv as init_cim_conv
+from repro.core import (CIMConfig, Granularity, conv_dequant_muls,
+                        conv_tiling)
 from repro.core.bitsplit import place_values, split_digits
 from repro.core.cim_conv import _quantize_conv_weight_int
 from repro.core.cim_linear import _quantize_act

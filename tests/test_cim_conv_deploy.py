@@ -11,9 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CIMConfig, Granularity, calibrate_cim_conv,
-                        cim_conv2d, conv_tiling, init_cim_conv,
-                        pack_deploy_conv)
+from repro.api import calibrate_conv as calibrate_cim_conv
+from repro.api import conv2d as cim_conv2d
+from repro.api import init_conv as init_cim_conv
+from repro.api import pack_conv as pack_deploy_conv
+from repro.api import pack_model
+from repro.core import CIMConfig, Granularity, conv_tiling
 
 
 def _cfg(**kw):
@@ -150,7 +153,7 @@ def test_resnet_pack_deploy_forward():
     params = resnet.calibrate(params, state, x, cfg)
     y_e, _ = resnet.forward(params, state, x, cfg, train=False)
 
-    dp = resnet.pack_deploy(params, cfg)
+    dp = pack_model(params, cfg.cim)
     dcfg = dataclasses.replace(cfg, cim=cim.replace(mode="deploy"))
     y_d, _ = resnet.forward(dp, state, x, dcfg, train=False)
     np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_e),

@@ -6,8 +6,11 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (CIMConfig, Granularity, calibrate_cim, cim_linear,
-                        init_cim_linear, pack_deploy)
+from repro.api import calibrate_linear as calibrate_cim
+from repro.api import init_linear as init_cim_linear
+from repro.api import linear as cim_linear
+from repro.api import pack_linear as pack_deploy
+from repro.core import CIMConfig, Granularity
 from repro.core.cim_linear import weight_scales_from
 
 

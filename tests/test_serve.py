@@ -61,3 +61,34 @@ def test_temperature_sampling_runs(setup):
     out = eng.generate_batch(prompts, 5)
     assert out.shape == (2, 5)
     assert out.min() >= 0 and out.max() < cfg.vocab
+
+
+def test_engine_from_artifact_serves_deploy_backend(setup, tmp_path):
+    """Pack the LM with pack_model, save/load a DeployArtifact, and serve
+    it on the deploy backend; greedy tokens must match the emulate path
+    when the CIM numerics are the bottleneck-free f32 configuration."""
+    import dataclasses
+
+    from repro.api import model_artifact
+    from repro.core.cim_linear import CIMConfig
+    from repro.serve.engine import engine_from_artifact
+
+    cfg, model, _ = setup
+    cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=32, array_cols=32)
+    qcfg = dataclasses.replace(cfg, cim=cim)
+    qmodel = get_model(qcfg)
+    qparams = init_params(qmodel.specs(qcfg), jax.random.PRNGKey(0))
+
+    art = model_artifact(qparams, cim, meta={"arch": "qwen3-0.6b-reduced"})
+    art.save(str(tmp_path))
+
+    eng = engine_from_artifact(str(tmp_path), qcfg, batch_size=2, max_len=32)
+    assert eng.cfg.cim.mode == "deploy"
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (2, 4),
+                                            0, qcfg.vocab), np.int32)
+    out_deploy = eng.generate_batch(prompts, 3)
+
+    eng_e = ServingEngine(qmodel, qcfg, qparams, batch_size=2, max_len=32)
+    out_emulate = eng_e.generate_batch(prompts, 3)
+    assert np.array_equal(out_deploy, out_emulate)

@@ -14,10 +14,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CIMConfig, Granularity, calibrate_cim,
-                        calibrate_cim_conv, cim_conv2d, cim_linear,
-                        init_cim_conv, init_cim_linear, pack_deploy,
-                        pack_deploy_conv, perturb_packed)
+from repro.api import calibrate_conv as calibrate_cim_conv
+from repro.api import calibrate_linear as calibrate_cim
+from repro.api import conv2d as cim_conv2d
+from repro.api import init_conv as init_cim_conv
+from repro.api import init_linear as init_cim_linear
+from repro.api import linear as cim_linear
+from repro.api import pack_conv as pack_deploy_conv
+from repro.api import pack_linear as pack_deploy
+from repro.api import pack_model
+from repro.core import CIMConfig, Granularity, perturb_packed
 from repro.core.variation import variation_wanted
 from repro.eval import robustness
 
@@ -174,7 +180,7 @@ def test_resnet_deploy_matches_emulate_under_variation():
     vk = jax.random.PRNGKey(21)
     y_e, _ = resnet.forward(params, state, x, cfg, train=False,
                             variation_key=vk, variation_std=0.15)
-    dp = resnet.pack_deploy(params, cfg)
+    dp = pack_model(params, cfg.cim)
     dcfg = dataclasses.replace(cfg, cim=cim.replace(mode="deploy"))
     y_d, _ = resnet.forward(dp, state, x, dcfg, train=False,
                             variation_key=vk, variation_std=0.15)
@@ -224,7 +230,7 @@ def test_per_layer_attribution_runs_on_deploy():
     params, state = resnet.init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
     params = resnet.calibrate(params, state, x, cfg)
-    dp = resnet.pack_deploy(params, cfg)
+    dp = pack_model(params, cfg.cim)
     dcfg = dataclasses.replace(cfg, cim=cim.replace(mode="deploy"))
     attrib = robustness.per_layer_attribution(
         dp, state, dcfg, x, key=jax.random.PRNGKey(2), sigma=0.3)

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Public-surface snapshot lint (CI docs job).
+
+Parses ``__all__`` out of the public packages' ``__init__.py`` files
+*statically* (ast — no jax import needed) and compares against the
+checked-in snapshot ``tools/api_surface.txt``. CI fails when the public
+surface drifts without the snapshot being updated in the same change —
+accidental exports and silent removals both show up in review.
+
+  python tools/check_api.py            # verify (CI)
+  python tools/check_api.py --update   # rewrite the snapshot
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SNAPSHOT = REPO / "tools" / "api_surface.txt"
+
+# public packages whose __all__ is contract; extend as surfaces stabilize
+MODULES = (
+    "repro.api",
+    "repro.core",
+    "repro.checkpoint",
+    "repro.serve",
+)
+
+
+def module_all(dotted: str) -> list[str]:
+    path = REPO / "src" / Path(*dotted.split(".")) / "__init__.py"
+    tree = ast.parse(path.read_text(encoding="utf-8"), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+            if "__all__" in targets:
+                value = ast.literal_eval(node.value)
+                return sorted(str(v) for v in value)
+    raise SystemExit(f"{path}: no literal __all__ found")
+
+
+def current_surface() -> list[str]:
+    lines = []
+    for mod in MODULES:
+        lines.extend(f"{mod}:{name}" for name in module_all(mod))
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    surface = current_surface()
+    if "--update" in argv:
+        SNAPSHOT.write_text("\n".join(surface) + "\n", encoding="utf-8")
+        print(f"wrote {len(surface)} entries to "
+              f"{SNAPSHOT.relative_to(REPO)}")
+        return 0
+    if not SNAPSHOT.exists():
+        print(f"missing snapshot {SNAPSHOT.relative_to(REPO)}; run "
+              "`python tools/check_api.py --update` and commit it")
+        return 1
+    want = [l for l in SNAPSHOT.read_text(encoding="utf-8").splitlines()
+            if l.strip()]
+    added = sorted(set(surface) - set(want))
+    removed = sorted(set(want) - set(surface))
+    if not added and not removed:
+        print(f"public surface OK ({len(surface)} entries, "
+              f"{len(MODULES)} modules)")
+        return 0
+    for name in added:
+        print(f"NEW export not in snapshot: {name}")
+    for name in removed:
+        print(f"snapshot entry no longer exported: {name}")
+    print("\npublic surface drifted; if intentional, run "
+          "`python tools/check_api.py --update` and commit the snapshot")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
