@@ -1,0 +1,147 @@
+"""Column-parallel serving benchmark: tokens/sec and per-device HBM bytes
+vs device count (DESIGN.md §10).
+
+Packs a reduced LM into a ``DeployArtifact`` once, then serves the same
+artifact on 1-, 2-, ... up to ``len(jax.devices())``-device ``("model",)``
+meshes through ``engine_from_artifact`` — the exact path
+``launch/serve.py --mesh`` takes. Two numbers per point:
+
+* **tokens/sec** — measured lockstep ``generate_batch`` throughput. On a
+  real multi-chip host this scales with device count; on an emulated CPU
+  mesh (``--xla_force_host_platform_device_count=N``) the devices
+  timeshare one socket, so the meaningful check is that sharding does not
+  collapse throughput while per-device bytes drop.
+* **per-device plane bytes** — analytic, extending the §7 traffic model:
+  each device holds ``n_padded/D`` of every layer's packed digit-plane
+  columns plus its slice of the full-column scales; ragged layers charge
+  the padded shard (the kernel's last-shard padding rule). Replicated
+  bytes (embeddings, norms, non-column scales) are reported separately.
+
+Run under an emulated mesh for the scaling curve (what CI does):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.bench_serve_sharded
+
+Output: ``serve_sharded,...`` CSV lines + ``bench_serve_sharded.json``
+(schema documented in benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def plane_bytes(artifact, n_dev: int):
+    """(per_device_sharded, replicated) bytes for one column-shard count.
+
+    Walks the packed tree with the same rule ``DeployArtifact.shard``
+    uses: arrays in a CIM node whose last axis is the node's column count
+    shard when the columns divide n_dev; ragged nodes — and everything
+    without a full column axis — replicate (shard() keeps ragged layers
+    resident everywhere; the kernel pads-and-shards them per call)."""
+    import jax.numpy as jnp
+    sharded = 0
+    replicated = 0
+
+    def nbytes(a):
+        bits = 4 if a.dtype == jnp.int4 else a.dtype.itemsize * 8
+        return int(a.size * bits) // 8
+
+    def walk(node):
+        nonlocal sharded, replicated
+        if isinstance(node, dict):
+            if "w_digits" in node:
+                n = int(node["w_digits"].shape[-1])
+                for v in node.values():
+                    if (getattr(v, "ndim", 0) >= 1 and v.shape[-1] == n
+                            and n % n_dev == 0):
+                        sharded += nbytes(v) // n_dev
+                    else:
+                        replicated += nbytes(v) if hasattr(v, "size") else 0
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+        else:
+            replicated += nbytes(node) if hasattr(node, "size") else 0
+    walk(artifact.params)
+    return sharded, replicated
+
+
+def run(csv=None, *, batch=2, prompt_len=8, new_tokens=16, out_json=None):
+    from repro.api import CIMConfig, model_artifact
+    from repro.configs.registry import get_config
+    from repro.models.registry import get_model
+    from repro.nn import init_params
+    from repro.nn.module import session_mesh
+    from repro.serve.engine import engine_from_artifact
+
+    cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=128, array_cols=128,
+                    use_kernel=False)
+    cfg = get_config("qwen3-0.6b", reduced=True, cim=cim)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
+    artifact = model_artifact(params, cim, meta={"arch": "qwen3-0.6b"})
+
+    n_avail = len(jax.devices())
+    counts = [d for d in (1, 2, 4, 8, 16) if d <= n_avail]
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+
+    points = []
+    base = None
+    for d in counts:
+        mesh = None if d == 1 else jax.make_mesh((d,), ("model",))
+        with session_mesh(mesh):   # scope: next d must not see this mesh
+            eng = engine_from_artifact(artifact, cfg, mesh=mesh,
+                                       batch_size=batch, max_len=256)
+            eng.generate_batch(prompts, 2)          # warm the jit caches
+            t0 = time.time()
+            out = eng.generate_batch(prompts, new_tokens)
+            dt = time.time() - t0
+        if base is None:
+            base = np.asarray(out)
+        assert np.array_equal(base, np.asarray(out)), \
+            f"sharded serving diverged at {d} devices"
+        tps = out.shape[0] * out.shape[1] / dt
+        shard_b, rep_b = plane_bytes(artifact, d)
+        if d == 1:
+            bytes_1dev = shard_b + rep_b
+        # §7 roofline: decode is weight-HBM-bound, so modeled tokens/sec
+        # scales as the inverse of the per-device bytes read per step
+        speedup = round(bytes_1dev / (shard_b + rep_b), 3)
+        points.append({"devices": d, "tokens_per_sec": round(tps, 2),
+                       "per_device_plane_bytes": shard_b,
+                       "replicated_bytes": rep_b,
+                       "modeled_decode_speedup": speedup})
+        line = (f"serve_sharded,{d},{tps:.2f},{shard_b},{rep_b},{speedup}")
+        print(line)
+        if csv is not None:
+            csv.append(line)
+
+    doc = {"schema": "bench_serve_sharded/v1", "arch": "qwen3-0.6b-reduced",
+           "batch": batch, "prompt_len": prompt_len,
+           "new_tokens": new_tokens,
+           # only meaningful when more than one mesh size was compared
+           "bit_exact_across_meshes": len(points) > 1,
+           "points": points}
+    if out_json is not None:
+        # opt-in (module entry point / CI sharded job): tokens_per_sec is
+        # wall-clock, so the smoke tier must not churn the checked-in
+        # sample on every run
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"[bench_serve_sharded] wrote {out_json} "
+              f"({len(points)} mesh points, {n_avail} devices visible)")
+    return doc
+
+
+if __name__ == "__main__":
+    run(out_json="bench_serve_sharded.json")

@@ -28,7 +28,7 @@ def main(argv=None) -> None:
     from . import (bench_conv_kernel, bench_dequant_overhead,
                    bench_granularity, bench_hw_cost, bench_kernel,
                    bench_lm_cim, bench_psum_range, bench_qat_stages,
-                   bench_variation)
+                   bench_serve_sharded, bench_variation)
 
     csv = []
     t0 = time.time()
@@ -37,6 +37,7 @@ def main(argv=None) -> None:
     bench_hw_cost.run(csv=csv)                     # analytic HW cost model
     bench_kernel.run(csv=csv)                      # kernel microbench
     bench_conv_kernel.run(csv=csv)                 # fused conv deploy bench
+    bench_serve_sharded.run(csv=csv)               # column-parallel serving
     if not args.smoke:
         bench_granularity.run(steps=steps, csv=csv)   # Fig. 7 / Table III
         bench_qat_stages.run(steps=steps, csv=csv)    # Fig. 9

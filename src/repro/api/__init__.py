@@ -29,7 +29,7 @@ from repro.core.cim_linear import _linear_forward as linear
 from repro.core.cim_linear import _pack_linear as pack_linear
 
 from .artifact import (ARTIFACT_LAYOUT_VERSION, DeployArtifact,
-                       model_artifact, pack_model)
+                       col_shard_axes, model_artifact, pack_model)
 from .backends import (Backend, get_backend, is_packed, register_backend,
                        registered_backends)
 from .handles import QuantConv2d, QuantLinear, Variation
@@ -37,7 +37,8 @@ from .handles import QuantConv2d, QuantLinear, Variation
 __all__ = [
     "ARTIFACT_LAYOUT_VERSION", "Backend", "CIMConfig", "DeployArtifact",
     "QuantConv2d", "QuantLinear", "Variation", "calibrate_conv",
-    "calibrate_linear", "conv2d", "get_backend", "init_conv", "init_linear",
-    "is_packed", "linear", "model_artifact", "pack_conv", "pack_linear",
-    "pack_model", "register_backend", "registered_backends",
+    "calibrate_linear", "col_shard_axes", "conv2d", "get_backend",
+    "init_conv", "init_linear", "is_packed", "linear", "model_artifact",
+    "pack_conv", "pack_linear", "pack_model", "register_backend",
+    "registered_backends",
 ]

@@ -109,7 +109,13 @@ class DeployArtifact:
         return path
 
     @classmethod
-    def load(cls, path: str) -> "DeployArtifact":
+    def load(cls, path: str, *, mesh=None,
+             mesh_axis: str = "model") -> "DeployArtifact":
+        """Read an artifact back, bit-exactly. With ``mesh``, each CIM
+        node's digit planes (and full-column scales) are placed
+        column-sharded over ``mesh_axis`` as they come off disk — every
+        device receives only its own column shard of the host buffer, so
+        no device ever materializes a full plane (DESIGN.md §10)."""
         jpath = os.path.join(path, "artifact.json")
         if not os.path.exists(jpath):
             raise FileNotFoundError(
@@ -123,9 +129,46 @@ class DeployArtifact:
                 f"build reads versions <= {ARTIFACT_LAYOUT_VERSION}. "
                 "Upgrade the repro library or re-pack the artifact.")
         cfg = CIMConfig(**head["config"])
-        params = jax.tree.map(jnp.asarray, _ckpt.restore_tree(path, step=0))
-        return cls(kind=head["kind"], config=cfg, params=params,
-                   layout_version=version, meta=dict(head.get("meta", {})))
+        params = _ckpt.restore_tree(path, step=0)
+        if mesh is None:
+            params = jax.tree.map(jnp.asarray, params)
+        art = cls(kind=head["kind"], config=cfg, params=params,
+                  layout_version=version, meta=dict(head.get("meta", {})))
+        if mesh is not None:
+            # shard() device_puts straight from the restored host (numpy)
+            # buffers: each device receives only its own column slice; the
+            # full plane is never committed to any single device
+            art = art.shard(mesh, mesh_axis=mesh_axis)
+        return art
+
+    def shard(self, mesh, *, mesh_axis: str = "model") -> "DeployArtifact":
+        """Place the packed params on ``mesh``: digit planes and their
+        full-column scales sharded along the output-column axis (the
+        layout the column-parallel deploy path consumes in place — no
+        per-call resharding), everything else replicated.
+
+        Columns that do not divide the shard count stay replicated; the
+        kernel wrapper pads and shards them per call instead (same rule as
+        its last-block padding), so ragged layers still serve correctly.
+
+        Leaves may be host (numpy) buffers — ``load(mesh=...)`` passes
+        them through un-materialized, so ``device_put`` here sends each
+        device only its own column slice and the full plane never lands
+        on any single device.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        n_dev = int(mesh.shape[mesh_axis])
+        rep = NamedSharding(mesh, P())
+
+        def place(node):
+            if isinstance(node, dict):
+                if "w_digits" in node and n_dev > 1:
+                    return _shard_node(node, mesh, mesh_axis, n_dev, rep)
+                return {k: place(v) for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                return [place(v) for v in node]
+            return jax.device_put(node, rep)
+        return dataclasses.replace(self, params=place(self.params))
 
 
 # ---------------------------------------------------------------------------
@@ -203,12 +246,60 @@ def pack_model(params: Dict, cfg: CIMConfig, *,
     return walk(params, ())
 
 
+def col_shard_axes(packed: Dict) -> Dict[str, int]:
+    """Map every packed CIM node ('/'-joined tree path) to the axis its
+    digit planes shard over for column-parallel serving — always the last
+    axis (N for linear planes, C_out for conv planes; the stacked 5-D/7-D
+    forms keep it last too). Stamped into model artifacts as
+    ``meta["col_shard"]`` so external serving tools can plan placement
+    from ``artifact.json`` alone, without opening the leaf store.
+    (``DeployArtifact.shard`` itself re-derives the same layout
+    structurally from the params tree, so a stale meta can never
+    misplace a plane.)"""
+    out: Dict[str, int] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "w_digits" in node:
+                out["/".join(path)] = -1
+                return
+            for k, v in node.items():
+                walk(v, path + (k,))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (str(i),))
+    walk(packed, ())
+    return out
+
+
+def _shard_node(node: Dict, mesh, mesh_axis: str, n_dev: int, rep) -> Dict:
+    """Place one packed CIM node: arrays carrying the node's column axis
+    (last dim == the planes' column count) shard over ``mesh_axis`` when
+    the columns divide the device count; everything else replicates.
+    Ragged nodes stay replicated — the kernel wrapper pads and shards
+    them per call (the last-shard padding rule, DESIGN.md §10)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = int(node["w_digits"].shape[-1])
+    out = {}
+    for k, v in node.items():
+        cols = (hasattr(v, "ndim") and v.ndim >= 1
+                and v.shape[-1] == n and n % n_dev == 0)
+        sh = (NamedSharding(mesh, P(*([None] * (v.ndim - 1) + [mesh_axis])))
+              if cols else rep)
+        out[k] = jax.device_put(v, sh)
+    return out
+
+
 def model_artifact(params: Dict, cfg: CIMConfig, *,
                    meta: Optional[Dict[str, Any]] = None,
                    variation_key: Optional[jax.Array] = None,
                    variation_std=None) -> DeployArtifact:
-    """``pack_model`` + wrap into a saveable model ``DeployArtifact``."""
+    """``pack_model`` + wrap into a saveable model ``DeployArtifact``.
+    The shardable column axis of every packed node is recorded in
+    ``meta["col_shard"]`` (see ``col_shard_axes``)."""
     packed = pack_model(params, cfg, variation_key=variation_key,
                         variation_std=variation_std)
+    # col_shard last: the computed map wins over a caller-supplied key
+    m = {**(meta or {}), "col_shard": col_shard_axes(packed)}
     return DeployArtifact(kind="model", config=_packed_config(cfg),
-                          params=packed, meta=dict(meta or {}))
+                          params=packed, meta=m)

@@ -13,7 +13,10 @@ Builtins (registered on import):
            per-array integer partial sums materialized for gradients.
   deploy   packed-int inference through the fused Pallas kernels
            (``cfg.use_kernel=False`` falls back to the jnp oracle for
-           portable HLO) — bit-exact with ``emulate``.
+           portable HLO) — bit-exact with ``emulate``. Mesh-aware: when a
+           session mesh with a >1-device ``"model"`` axis is installed
+           (serving engine / launchers), the packed planes dispatch
+           column-sharded, one kernel shard per device (DESIGN.md §10).
   ref      packed-int inference forced onto the jnp oracle regardless of
            ``cfg.use_kernel`` — the arbitration reference for kernel
            debugging and backend-equivalence tests.

@@ -129,7 +129,10 @@ class QuantLinear(_Handle):
         vkey, vstd = _vkv(variation)
         packed = _pack_linear(self._require_trainable("pack"), self.cfg,
                               variation_key=vkey, variation_std=vstd)
-        m = {"k": self.k, "n": self.n, **(meta or {})}
+        # col_shard: the planes' output-column (N) axis is the unit of
+        # independence column-parallel serving shards over (DESIGN.md §10)
+        m = {"k": self.k, "n": self.n, **(meta or {}),
+             "col_shard": {"": -1}}
         return DeployArtifact(kind="linear", config=_packed_config(self.cfg),
                               params=packed, meta=m)
 
@@ -182,7 +185,8 @@ class QuantConv2d(_Handle):
                             variation_key=vkey, variation_std=vstd)
         m = {"kh": self.kh, "kw": self.kw, "c_in": self.c_in,
              "c_out": self.c_out, "stride": self.stride,
-             "padding": self.padding, **(meta or {})}
+             "padding": self.padding, **(meta or {}),
+             "col_shard": {"": -1}}
         return DeployArtifact(kind="conv", config=_packed_config(self.cfg),
                               params=packed, meta=m)
 

@@ -223,8 +223,14 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
     Cell noise is injected by the kernel wrapper on the flattened packed
     planes (row-major identical to the 6-D layout) — the int planes are
     never re-packed per Monte-Carlo sample.
+
+    When a mesh with a >1-device ``"model"`` axis is installed (see
+    ``_forward_deploy``), the planes run column-sharded over C_out: every
+    device extracts the same patches, evaluates its own output-channel
+    shard, and one all-gather merges the activations (DESIGN.md §10).
     """
     from repro.kernels import ops as kops  # lazy: avoids import cycle
+    from repro.nn.module import current_mesh
 
     d6 = params["w_digits"]              # (S, kt, kh, kw, cpa, C_out)
     n_split, k_tiles, kh, kw, c_per_array, c_out = d6.shape
@@ -263,6 +269,7 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
         psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
         use_kernel=cfg.use_kernel,
         variation_key=variation_key, variation_std=sigma,
+        mesh=current_mesh(),
     )
     return y.astype(compute_dtype)
 

@@ -305,8 +305,15 @@ def _forward_emulate(x, params, cfg, variation_key, sigma, compute_dtype):
 def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
     """Inference from packed int digit planes (see ``_pack_linear``). Cell
     noise is injected by the kernel wrapper on the packed planes — the
-    int planes themselves are never re-packed per sample."""
+    int planes themselves are never re-packed per sample.
+
+    When a mesh with a >1-device ``"model"`` axis is installed
+    (``repro.nn.module.set_activation_rules(rules, mesh)`` — the serving
+    engine and launchers do this), the digit planes run column-sharded
+    over that axis: each device evaluates its own output-column shard and
+    one all-gather merges the dequantized activations (DESIGN.md §10)."""
     from repro.kernels import ops as kops  # lazy: avoids import cycle
+    from repro.nn.module import current_mesh
 
     digits = params["w_digits"]                               # int (S,kt,r,N)
     if not variation_wanted(variation_key, sigma):
@@ -338,6 +345,7 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
         psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
         use_kernel=cfg.use_kernel,
         variation_key=variation_key, variation_std=sigma,
+        mesh=current_mesh(),
     )
     return y.astype(compute_dtype)
 

@@ -2,13 +2,15 @@
 
 The paper's stretched-kernel tiling (§III-C, Fig. 5) makes each CIM
 array's MAC a convolution over a ``c_per_array`` channel slice with all
-``kh*kw`` taps resident in the array. The emulate path realizes this as
+``kh*kw`` taps resident in the array. The ``emulate`` backend
+(``repro.api.backends`` registry — conv dispatch goes through
+``get_backend(cfg.mode).conv``, not mode strings) realizes this as
 one XLA grouped convolution, which costs two HBM round-trips the hardware
 never pays: the activation channel-slices are *tiled* ``n_split``x into
 the group axis, and the full (B, H', W', S, kt, C_out) partial-sum tensor
 is materialized before ADC quantization.
 
-The deploy path here removes both:
+The ``deploy`` backend's kernel here removes both:
 
 (Cell variation rides the same lowering: ``variation_key``/
 ``variation_std`` pass through to the matmul kernel, which perturbs the
@@ -30,6 +32,13 @@ per-cell noise from a shared key; DESIGN.md §8.)
 VMEM working set per grid step is the linear kernel's (DESIGN.md §6);
 rows = kh*kw*c_per_array <= array_rows, so conv blocks are never larger
 than the linear blocks the budget was sized for.
+
+Shard-axis invariant (DESIGN.md §10): the trailing C_out axis of the
+flattened planes/scales is the column-parallel shard axis. Patches are
+output-channel-independent, so the sharded serving path extracts them
+once (replicated) and runs this same lowering one C_out shard per device
+— keep any future patch/geometry change free of cross-output-channel
+coupling or the shard_map dispatch in ``kernels/ops`` breaks.
 """
 from __future__ import annotations
 

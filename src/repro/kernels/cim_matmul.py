@@ -1,10 +1,13 @@
 """Pallas TPU kernel: fused CIM matmul with partial-sum (ADC) quantization.
 
-TPU-native realization of the paper's array pipeline (DESIGN.md §2): the
-CIM array boundary becomes the K-grid dimension of a tiled matmul, and the
+TPU-native realization of the paper's array pipeline (DESIGN.md §2).
+This is the arithmetic behind the ``deploy`` backend of the
+``repro.api.backends`` registry (``CIMConfig.mode`` is a backend name;
+dispatch happens through ``get_backend``, not mode strings): the CIM
+array boundary becomes the K-grid dimension of a tiled matmul, and the
 ADC's per-column quantization is applied to each array-tile's accumulator
 *in VMEM* before cross-array shift-and-add — the (M, S, kt, N) partial-sum
-tensor never exists in HBM on this path (the emulate path still
+tensor never exists in HBM on this path (the ``emulate`` backend still
 materializes it, deliberately, so LSQ gradients can flow through the ADC).
 
 Grid: (M/bm, N/bn, k_tiles, n_split); the two reduction dims (array tile
@@ -12,6 +15,17 @@ t, bit-split s) iterate fastest so output-block revisits are consecutive
 and the accumulation stays resident. The conv deploy path
 (kernels/cim_conv) lowers onto this same grid with M = B*H'*W' and
 rows = kh*kw*c_per_array (DESIGN.md §3).
+
+Shard-axis invariants (DESIGN.md §10): the trailing N axis of ``digits``
+/ ``s_p`` / ``deq`` is the column-parallel shard axis — each output
+column's full pipeline (MACs, ADC quantization, dequant, shift-and-add)
+reads only that column's planes and scales, and both reduction dims live
+inside the grid of ONE kernel invocation. ``kernels/ops`` exploits this:
+on a multi-device serving mesh it calls this kernel once per column
+shard under ``shard_map`` (scales sliced with their columns, ragged N
+padded like the last bn block) and all-gathers only the final f32
+output. Nothing in this module may introduce cross-column coupling
+(e.g. column-normalized arithmetic) without breaking that contract.
 
 Cell variation (DESIGN.md §8): ``variation_key``/``variation_std`` make
 the kernel evaluate one Monte-Carlo device realization — the digit

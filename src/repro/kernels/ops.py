@@ -10,6 +10,19 @@ cell noise (paper §IV-E). The kernel path draws the noise inside
 ``cim_matmul_pallas`` (before block padding); the oracle path perturbs
 here with the same ``repro.core.variation.perturb_digits``, so kernel and
 oracle stay bit-comparable under a shared key (DESIGN.md §8).
+
+Both wrappers also accept ``mesh``/``mesh_axis``: when a mesh with more
+than one device along ``mesh_axis`` (default ``"model"``) is given, the
+packed digit planes and their column scales are sharded column-wise over
+that axis via ``shard_map`` — each device runs the kernel on its own
+output-column shard (per-column ADC + dequant scales are local by
+construction, DESIGN.md §10), and the only cross-device collective is one
+all-gather of the final dequantized activations. Ragged column counts pad
+the last shard (scale 1, deq 0 — dead columns) and slice after the
+gather, mirroring the kernel's own last-block padding. Cell-variation
+noise is always drawn on the FULL unpadded packed planes *before*
+sharding, so a sharded evaluation is bit-exact with the single-device
+evaluation under the same key.
 """
 from __future__ import annotations
 
@@ -22,9 +35,85 @@ from . import ref
 from .cim_conv import cim_conv_pallas
 from .cim_matmul import cim_matmul_pallas
 
+#: Mesh axis the packed column (output-channel) dimension shards over by
+#: default — the tensor-parallel axis of the serving meshes (launch/serve
+#: --mesh, DESIGN.md §10).
+COL_SHARD_AXIS = "model"
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def col_shards(mesh, mesh_axis: str = COL_SHARD_AXIS) -> int:
+    """Number of column shards a mesh implies (1 = unsharded dispatch)."""
+    if mesh is None or mesh_axis not in getattr(mesh, "axis_names", ()):
+        return 1
+    return int(mesh.shape[mesh_axis])
+
+
+def pad_cols(digits, s_p, deq, n_shards: int):
+    """Pad the packed column axis to a multiple of ``n_shards``.
+
+    Dead columns get digit 0, psum scale 1 and dequant scale 0 — exactly
+    the kernel's last-block padding rule — so they contribute nothing and
+    are sliced off after the output gather."""
+    n = digits.shape[-1]
+    pad = (-n) % n_shards
+    if pad:
+        digits = jnp.pad(digits, [(0, 0)] * (digits.ndim - 1) + [(0, pad)])
+        s_p = jnp.pad(s_p, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
+        deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad)))
+    return digits, s_p, deq
+
+
+def _cim_matmul_sharded(
+    a2, digits, s_p, deq, mesh, mesh_axis, *,
+    psum_bits, psum_quant, use_kernel, block_m, block_n,
+    variation_key, variation_std,
+):
+    """Column-parallel CIM matmul: one kernel shard per device.
+
+    a2 (M, k_tiles, rows) is replicated; digits/s_p/deq shard over their
+    last (column) axis. No partial sum crosses a device boundary — the
+    reduction dims (array tile, bit-split) live inside each shard's grid —
+    so the single collective is the all-gather of (M, N/D) f32 outputs.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.nn.module import shard_map  # lazy: avoids import cycle
+
+    if digits.dtype == jnp.int4:
+        # int4 is the HBM storage dtype; shard boundaries are byte-aligned
+        digits = digits.astype(jnp.int8)
+    if variation_wanted(variation_key, variation_std):
+        # full unpadded packed layout, BEFORE shard padding: same noise
+        # indices as the single-device paths (DESIGN.md §8, §10)
+        digits = perturb_digits(digits, variation_key, variation_std)
+    n = digits.shape[-1]
+    n_shards = mesh.shape[mesh_axis]
+    digits, s_p, deq = pad_cols(digits, s_p, deq, n_shards)
+    interp = not _on_tpu()
+
+    def local(a_, d_, sp_, dq_):
+        if use_kernel:
+            out = cim_matmul_pallas(
+                a_, d_, sp_, dq_, psum_bits=psum_bits,
+                psum_quant=psum_quant, block_m=block_m, block_n=block_n,
+                interpret=interp)
+        else:
+            out = ref.cim_matmul_ref(a_, d_, sp_, dq_, psum_bits=psum_bits,
+                                     psum_quant=psum_quant)
+        return jax.lax.all_gather(out, mesh_axis, axis=1, tiled=True)
+
+    col = P(*([None] * (digits.ndim - 1) + [mesh_axis]))
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), col, P(None, None, mesh_axis),
+                  P(None, None, mesh_axis)),
+        out_specs=P(), check_vma=False,
+    )(a2, digits, s_p, deq)
+    return out[:, :n]
 
 
 def cim_matmul(
@@ -40,6 +129,8 @@ def cim_matmul(
     block_n: int = 128,
     variation_key=None,
     variation_std=None,
+    mesh=None,
+    mesh_axis: str = COL_SHARD_AXIS,
 ) -> jnp.ndarray:
     """CIM matmul over pre-tiled inputs.
 
@@ -48,6 +139,9 @@ def cim_matmul(
     s_p:    (S, k_tiles, N) ADC scales
     deq:    (S, k_tiles, N) fused dequant scales (2^{cs} * s_w * s_a)
     variation_key/std: optional log-normal cell-noise realization
+    mesh/mesh_axis: column-shard the planes over this mesh axis (>1
+        device: shard_map column-parallel dispatch, bit-exact with the
+        single-device path; DESIGN.md §10)
     returns (..., N) float32
     """
     batch_shape = a_t.shape[:-2]
@@ -55,7 +149,13 @@ def cim_matmul(
     for d in batch_shape:
         m *= d
     a2 = a_t.reshape((m,) + a_t.shape[-2:])
-    if use_kernel:
+    if col_shards(mesh, mesh_axis) > 1:
+        out = _cim_matmul_sharded(
+            a2, digits, s_p, deq, mesh, mesh_axis,
+            psum_bits=psum_bits, psum_quant=psum_quant,
+            use_kernel=use_kernel, block_m=block_m, block_n=block_n,
+            variation_key=variation_key, variation_std=variation_std)
+    elif use_kernel:
         out = cim_matmul_pallas(
             a2, digits, s_p, deq, variation_key, variation_std,
             psum_bits=psum_bits, psum_quant=psum_quant,
@@ -90,6 +190,8 @@ def cim_conv(
     block_n: int = 128,
     variation_key=None,
     variation_std=None,
+    mesh=None,
+    mesh_axis: str = COL_SHARD_AXIS,
 ) -> jnp.ndarray:
     """CIM conv over activation codes and packed conv digit planes.
 
@@ -99,6 +201,8 @@ def cim_conv(
     s_p:    (S, k_tiles, C_out) ADC scales
     deq:    (S, k_tiles, C_out) fused dequant scales
     variation_key/std: optional log-normal cell-noise realization
+    mesh/mesh_axis: column-shard the planes over this mesh axis — the
+        C_out axis for conv (DESIGN.md §10); bit-exact with single-device
     returns (B, H', W', C_out) float32
     """
     if digits.dtype == jnp.int4:
@@ -107,6 +211,19 @@ def cim_conv(
     if not isinstance(padding, str):
         # hashable for the jit static arg
         padding = tuple((int(lo), int(hi)) for lo, hi in padding)
+    if col_shards(mesh, mesh_axis) > 1:
+        # same lowering as cim_conv_pallas: patches once (replicated),
+        # then the column-parallel matmul grid over the C_out shards
+        k_tiles, rows = digits.shape[1], digits.shape[2]
+        a_t = ref.extract_conv_patches(a_int, kh, kw, stride, padding,
+                                       k_tiles, c_per_array)
+        b, ho, wo = a_t.shape[:3]
+        out = _cim_matmul_sharded(
+            a_t.reshape(b * ho * wo, k_tiles, rows), digits, s_p, deq,
+            mesh, mesh_axis, psum_bits=psum_bits, psum_quant=psum_quant,
+            use_kernel=use_kernel, block_m=block_m, block_n=block_n,
+            variation_key=variation_key, variation_std=variation_std)
+        return out.reshape(b, ho, wo, digits.shape[-1])
     if use_kernel:
         return cim_conv_pallas(
             a_int, digits, s_p, deq, variation_key, variation_std,

@@ -2,6 +2,19 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 4 --prompt-len 16 --new-tokens 32 [--cim deploy]
+
+Column-parallel serving (DESIGN.md §10): ``--mesh N`` shards every packed
+layer's digit planes over an N-device ``("model",)`` mesh — one kernel
+shard per device, bit-exact with ``--mesh 1``. On a CPU host, emulate the
+devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+      --reduced --cim deploy --mesh 4
+
+``--artifact PATH`` serves a saved ``DeployArtifact`` instead of packing
+fresh random-init weights; with ``--mesh`` the planes are placed
+shard-by-shard as they come off disk.
 """
 from __future__ import annotations
 
@@ -23,6 +36,13 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--cim", default="off",
                     choices=["off", "emulate", "deploy"])
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="devices along the 'model' axis: column-shard "
+                         "packed digit planes (deploy/artifact serving "
+                         "only; DESIGN.md §10)")
+    ap.add_argument("--artifact", default=None,
+                    help="path to a packed model DeployArtifact to serve "
+                         "(implies the artifact's pinned deploy backend)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -30,20 +50,51 @@ def main(argv=None):
     from repro.core.cim_linear import CIMConfig
     from repro.models.registry import get_model
     from repro.nn.module import init_params
-    from repro.serve.engine import ServingEngine
+    from repro.serve.engine import ServingEngine, engine_from_artifact
+
+    mesh = None
+    if args.mesh > 1:
+        if len(jax.devices()) < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices, found "
+                f"{len(jax.devices())}. On a CPU host set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh}")
+        mesh = jax.make_mesh((args.mesh,), ("model",))
+        if args.artifact is None and args.cim != "deploy":
+            raise SystemExit("--mesh shards packed digit planes; use it "
+                             "with --cim deploy or --artifact")
 
     cim = None
     if args.cim != "off":
-        cim = CIMConfig(enabled=True, mode=args.cim, weight_bits=4,
+        # QAT-shaped config; deploy serving packs these params below
+        cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4,
                         cell_bits=2, act_bits=8, psum_bits=6,
                         array_rows=128, array_cols=128, use_kernel=False)
     cfg = get_config(args.arch, reduced=args.reduced, cim=cim)
-    model = get_model(cfg)
-    params = init_params(model.specs(cfg), jax.random.PRNGKey(args.seed))
 
-    engine = ServingEngine(model, cfg, params, batch_size=args.batch,
-                           max_len=args.max_len,
-                           temperature=args.temperature, seed=args.seed)
+    if args.artifact is not None:
+        engine = engine_from_artifact(
+            args.artifact, cfg, mesh=mesh, batch_size=args.batch,
+            max_len=args.max_len, temperature=args.temperature,
+            seed=args.seed)
+    elif args.cim == "deploy":
+        # pack random-init emulate params into an in-memory artifact and
+        # serve it — the same packed bytes + engine path a saved artifact
+        # takes, so --mesh N is exercised end to end
+        from repro.api import model_artifact
+        model = get_model(cfg)
+        params = init_params(model.specs(cfg), jax.random.PRNGKey(args.seed))
+        artifact = model_artifact(params, cim, meta={"arch": args.arch})
+        engine = engine_from_artifact(
+            artifact, cfg, mesh=mesh, batch_size=args.batch,
+            max_len=args.max_len, temperature=args.temperature,
+            seed=args.seed)
+    else:
+        model = get_model(cfg)
+        params = init_params(model.specs(cfg), jax.random.PRNGKey(args.seed))
+        engine = ServingEngine(model, cfg, params, batch_size=args.batch,
+                               max_len=args.max_len,
+                               temperature=args.temperature, seed=args.seed)
     rng = np.random.RandomState(args.seed)
     prompts = rng.randint(0, cfg.vocab, size=(args.batch, args.prompt_len)
                           ).astype(np.int32)
@@ -51,8 +102,9 @@ def main(argv=None):
     out = engine.generate_batch(prompts, args.new_tokens)
     dt = time.time() - t0
     n_new = out.shape[0] * out.shape[1]
-    print(f"[serve] arch={args.arch} generated {out.shape} tokens in "
-          f"{dt:.2f}s ({n_new / dt:.1f} tok/s)")
+    devs = args.mesh if mesh is not None else 1
+    print(f"[serve] arch={args.arch} mesh={devs} generated {out.shape} "
+          f"tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s)")
     print(f"[serve] sample continuation: {out[0][:16].tolist()}")
     return 0
 

@@ -41,7 +41,9 @@ def conv_specs(
 
     In deploy mode the weight exists ONLY as the packed 6-D digit planes
     the fused Pallas conv kernel consumes (see repro.api.pack_conv); emulate
-    keeps the float HWIO weight for QAT."""
+    keeps the float HWIO weight for QAT. The out_axis lands on the planes'
+    last (C_out) axis — the column-shard axis of mesh-aware deploy serving
+    (DESIGN.md §10), matching ``DeployArtifact.shard``'s placement."""
     from repro.api.backends import is_packed
     from repro.core.granularity import conv_tiling
 

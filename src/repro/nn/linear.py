@@ -30,7 +30,10 @@ def linear_specs(
     from repro.api.backends import is_packed  # lazy: api builds on nn
     w_init = init or "fan_in:1.0"
     if is_packed(cim):
-        # packed-int inference: weights live ONLY as digit planes
+        # packed-int inference: weights live ONLY as digit planes. The
+        # out_axis lands on the planes' LAST axis (N) — the column-shard
+        # axis of the mesh-aware deploy path (DESIGN.md §10) — so spec-
+        # initialized packed params are born in the served layout.
         t = cim.tiling(k, n)
         specs = {"w_digits": ParamSpec(
             (t.n_split, t.k_tiles, t.array_rows, n), cim.store_dtype(),

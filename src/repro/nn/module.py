@@ -14,6 +14,7 @@ ever materialized through ``init_params`` (real run) or
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
@@ -151,6 +152,22 @@ def set_activation_rules(rules: Optional[Dict[str, Any]], mesh=None) -> None:
 
 def current_mesh():
     return _CURRENT_MESH
+
+
+@contextlib.contextmanager
+def session_mesh(mesh, rules: Optional[Dict[str, Any]] = None):
+    """Scope a session mesh: install ``mesh`` (+ optional activation
+    rules) on entry, restore the previous mesh/rules on exit. The
+    mesh-aware paths (column-sharded CIM deploy, EP MoE, flash decode)
+    read ``current_mesh()`` at *trace* time, so run both tracing and
+    execution inside the scope — or use ``set_activation_rules`` directly
+    for a process-lifetime install (what serving processes do)."""
+    prev_rules, prev_mesh = dict(_ACTIVATION_RULES), _CURRENT_MESH
+    set_activation_rules(rules if rules is not None else prev_rules, mesh)
+    try:
+        yield mesh
+    finally:
+        set_activation_rules(prev_rules, prev_mesh)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):

@@ -23,7 +23,8 @@ from repro.configs.base import ModelConfig
 from repro.models.registry import ModelFns
 
 
-def engine_from_artifact(artifact, cfg: ModelConfig,
+def engine_from_artifact(artifact, cfg: ModelConfig, *, mesh=None,
+                         mesh_axis: str = "model",
                          **engine_kw) -> "ServingEngine":
     """Build a ``ServingEngine`` that serves a packed ``DeployArtifact``
     on its packed backend (the fused Pallas deploy path).
@@ -33,14 +34,36 @@ def engine_from_artifact(artifact, cfg: ModelConfig,
     ``cim`` field is replaced by the artifact's pinned deploy config, so
     the engine runs exactly the quantization state that was packed, and
     ``linear_specs``-style callers see a packed backend.
+
+    ``mesh`` turns on column-parallel serving (DESIGN.md §10): every CIM
+    layer's digit planes are placed column-sharded over ``mesh_axis`` as
+    the artifact loads (each device receives only its own column slice),
+    the mesh is installed as the session mesh (``set_activation_rules``)
+    so the deploy forwards dispatch one kernel shard per device, and
+    generation is bit-exact with the single-device engine serving the
+    same artifact.
+
+    The session mesh is process-global and stays installed after this
+    call (a serving process serves one mesh for its lifetime);
+    ``mesh=None`` does NOT clear a previously installed mesh. To mix
+    sharded and unsharded engines in one process — tests, benchmarks —
+    scope each engine's build *and* generation inside
+    ``repro.nn.module.session_mesh(mesh)`` (or call
+    ``set_activation_rules(None, None)`` to tear down).
     """
     from repro.api import DeployArtifact
     from repro.models.registry import get_model
     if isinstance(artifact, (str, os.PathLike)):
-        artifact = DeployArtifact.load(os.fspath(artifact))
+        artifact = DeployArtifact.load(os.fspath(artifact), mesh=mesh,
+                                       mesh_axis=mesh_axis)
+    elif mesh is not None:
+        artifact = artifact.shard(mesh, mesh_axis=mesh_axis)
     if artifact.kind != "model":
         raise ValueError(f"engine_from_artifact needs a 'model' artifact, "
                          f"got kind={artifact.kind!r}")
+    if mesh is not None:
+        from repro.nn.module import current_rules, set_activation_rules
+        set_activation_rules(current_rules(), mesh)
     serve_cfg = dataclasses.replace(cfg, cim=artifact.config)
     model = get_model(serve_cfg)
     return ServingEngine(model, serve_cfg, artifact.params, **engine_kw)
