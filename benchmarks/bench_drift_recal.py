@@ -1,0 +1,185 @@
+"""Self-healing serving benchmark: accuracy over request count under a
+conductance-drift schedule, with and without in-service recalibration
+(DESIGN.md §11 — the robustness headline next to ``bench_hw_cost.json``).
+
+One QAT ResNet-20 is packed once; the same packed planes then serve a
+simulated deployment lifetime. At each request count ``t`` on the grid
+the chip is one ``core.variation.drift_tree`` realization of the
+pristine planes under the default drift schedule (column-gain dominant —
+the component the paper's per-column scales can absorb — plus smaller
+per-cell and read components). Two serving policies are compared on the
+identical chip realizations (common random numbers):
+
+* **no recal** — the artifact as shipped, drifting unattended;
+* **self-healing** — a ``serve.health.DriftMonitor`` watches the logit
+  statistics of every evaluation batch; when the drift score crosses the
+  soft threshold, ``eval.recalibrate.fit_scale_delta`` re-fits the
+  per-column scales against the drift at that ``t`` (probe codes, digit
+  planes untouched) and the fitted ``ScaleDelta`` serves from then on.
+
+The JSON acceptance block asserts the PR's claim: recalibrated accuracy
+strictly dominates the unattended curve beyond the detection point, and
+the final recalibrated point sits within 1% of clean deploy accuracy.
+
+  PYTHONPATH=src python -m benchmarks.bench_drift_recal [--smoke]
+
+``--smoke`` runs a minutes-scale tier (tiny QAT, short grid) and — like
+the other benches — never overwrites the checked-in
+``bench_drift_recal.json``.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import _data, evaluate, make_cim, resnet_cfg, train_qat
+from repro.core.granularity import Granularity as G
+from repro.core.variation import DriftSchedule, drift_tree
+from repro.eval.recalibrate import apply_scale_delta_params, fit_scale_delta
+from repro.models.resnet import forward
+from repro.serve.health import DriftMonitor, HealthConfig, logit_stats
+
+# sized so sigma_col(T) = 0.6 at the end of the default grid: strong
+# enough to crater unattended accuracy, coherent enough that per-column
+# scale refits recover it
+DEFAULT_SCHEDULE = dict(read_sigma=0.01, read_rate=0.0,
+                        cell_rate=4e-5, col_rate=6e-4)
+DEFAULT_TS = (0, 50, 100, 200, 300, 450, 600, 800, 1000)
+
+
+def _acc_and_stats(logits_fn, params, xb_list, yb_list, t):
+    """Accuracy over the eval batches at request count ``t``, plus the
+    logit statistics of the first batch (what the monitor ingests)."""
+    correct, n, stats = 0, 0, None
+    for xb, yb in zip(xb_list, yb_list):
+        lg = logits_fn(params, xb, jnp.int32(t))
+        if stats is None:
+            stats = logit_stats(lg)
+        correct += int((np.asarray(jnp.argmax(lg, -1)) == yb).sum())
+        n += len(yb)
+    return correct / n, stats
+
+
+def run(csv=None, *, steps=150, smoke=False, out_json=None, seed=0,
+        schedule=None, ts=None, probes=64):
+    from repro.api import pack_model
+
+    cim = make_cim(G.COLUMN, G.COLUMN)
+    if smoke:
+        steps, ts = min(steps, 10), ts or (0, 200, 600)
+    ts = tuple(ts or DEFAULT_TS)
+    sched = DriftSchedule(**(schedule or DEFAULT_SCHEDULE))
+
+    # two-stage QAT (the bench_qat_stages schedule): psum quantization
+    # frozen for the first half, enabled for the second — the one-stage
+    # run does not converge at this scaled-down CPU budget
+    data = _data(seed)
+    s1 = train_qat(cim, steps=max(1, steps // 2), seed=seed,
+                   freeze_psum=True, data=data)
+    res = train_qat(cim, steps=max(1, steps - steps // 2), seed=seed,
+                    params=s1["params"], state=s1["state"], data=data)
+    dcfg = resnet_cfg(cim.replace(mode="deploy"))
+    pristine = pack_model(res["params"], cim)
+    state = res["state"]
+
+    (_, _), (xte, yte) = data
+    if smoke:
+        xte, yte = xte[:128], yte[:128]
+    batch = 128
+    xb_list = [jnp.asarray(xte[i:i + batch]) for i in range(0, len(xte), batch)]
+    yb_list = [np.asarray(yte[i:i + batch]) for i in range(0, len(yte), batch)]
+
+    drift_key = jax.random.fold_in(jax.random.PRNGKey(seed), 0xD81F)
+
+    @jax.jit
+    def logits_at(params, xb, t):
+        # one chip realization at request count t; t is traced, so the
+        # whole grid reuses one compile per param-tree structure
+        drifted = drift_tree(params, drift_key, sched.at(t))
+        lg, _ = forward(drifted, state, xb, dcfg, train=False)
+        return lg
+
+    acc_clean = evaluate(pristine, state, dcfg, xte, yte)
+
+    # -- policy 1: unattended -------------------------------------------------
+    no_recal = {t: _acc_and_stats(logits_at, pristine, xb_list, yb_list, t)[0]
+                for t in ts}
+
+    # -- policy 2: monitored + self-healing ----------------------------------
+    monitor = DriftMonitor(HealthConfig(warmup=6, soft_threshold=4.0,
+                                        hard_threshold=12.0))
+    for xb in xb_list[:max(6, len(xb_list))] * 3:   # warmup on clean logits
+        if monitor.warmed_up:
+            break
+        lg, _ = forward(pristine, state, xb, dcfg, train=False)
+        monitor.observe(logit_stats(lg))
+
+    serving = pristine
+    detection_t = None
+    points = []
+    for t in ts:
+        acc, stats = _acc_and_stats(logits_at, serving, xb_list, yb_list, t)
+        monitor.observe(stats)
+        if monitor.drifted:
+            # detected: re-fit the column scales against the drift at t
+            # (deltas are absolute — always fitted from the pristine tree)
+            observed = drift_tree(pristine, drift_key, sched.at(jnp.int32(t)))
+            delta = fit_scale_delta(
+                pristine, observed, probes=probes,
+                key=jax.random.fold_in(jax.random.PRNGKey(seed), t),
+                meta={"t": int(t)})
+            serving = apply_scale_delta_params(pristine, delta)
+            monitor.note_recalibration()
+            if detection_t is None:
+                detection_t = t
+            acc, _ = _acc_and_stats(logits_at, serving, xb_list, yb_list, t)
+        points.append({"t": int(t), "acc_no_recal": round(no_recal[t], 4),
+                       "acc_recal": round(acc, 4),
+                       "drift_score": round(monitor.score, 3),
+                       "recalibrations": monitor.recalibrations})
+        line = (f"drift_recal,{t},{no_recal[t]:.4f},{acc:.4f},"
+                f"{monitor.recalibrations}")
+        print(line)
+        if csv is not None:
+            csv.append(line)
+
+    final = points[-1]
+    beyond = [p for p in points if detection_t is not None
+              and p["t"] > detection_t]
+    acceptance = {
+        "detection_t": detection_t,
+        "recal_dominates_beyond_detection": bool(
+            beyond and all(p["acc_recal"] > p["acc_no_recal"]
+                           for p in beyond)),
+        "final_recal_within_1pct_of_clean": bool(
+            final["acc_recal"] >= acc_clean - 0.01),
+    }
+    doc = {"schema": "bench_drift_recal/v1", "arch": "resnet20-bench",
+           "qat_steps": steps, "probes": probes,
+           "schedule": dict(schedule or DEFAULT_SCHEDULE),
+           "acc_clean": round(acc_clean, 4),
+           "acceptance": acceptance, "points": points}
+    print(f"[bench_drift_recal] clean={acc_clean:.4f} "
+          f"detection_t={detection_t} acceptance={acceptance}")
+    if out_json is not None and not smoke:
+        # the checked-in sample comes from the full tier only; the smoke
+        # tier (CI) must never churn it
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"[bench_drift_recal] wrote {out_json} ({len(points)} points)")
+    return doc
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="minutes-scale tier; never writes the JSON")
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    run(steps=args.steps, smoke=args.smoke,
+        out_json=None if args.smoke else "bench_drift_recal.json")

@@ -26,9 +26,9 @@ def main(argv=None) -> None:
     steps = 30 if args.fast else args.steps
 
     from . import (bench_conv_kernel, bench_dequant_overhead,
-                   bench_granularity, bench_hw_cost, bench_kernel,
-                   bench_lm_cim, bench_psum_range, bench_qat_stages,
-                   bench_serve_sharded, bench_variation)
+                   bench_drift_recal, bench_granularity, bench_hw_cost,
+                   bench_kernel, bench_lm_cim, bench_psum_range,
+                   bench_qat_stages, bench_serve_sharded, bench_variation)
 
     csv = []
     t0 = time.time()
@@ -42,6 +42,7 @@ def main(argv=None) -> None:
         bench_granularity.run(steps=steps, csv=csv)   # Fig. 7 / Table III
         bench_qat_stages.run(steps=steps, csv=csv)    # Fig. 9
         bench_variation.run(steps=steps, csv=csv)     # Fig. 10 (MC deploy)
+        bench_drift_recal.run(steps=steps, csv=csv)   # self-healing serving
         bench_lm_cim.run(steps=max(20, steps // 3), csv=csv)  # LM (beyond paper)
 
     print(f"\n== CSV summary ({time.time() - t0:.0f}s total) ==")

@@ -83,3 +83,26 @@ while len(done) < 3:
         done[fin["rid"]] = fin["tokens"]
 print(f"[serve] slot engine finished {len(done)} requests: "
       f"{[len(v) for v in done.values()]} new tokens each")
+
+# self-healing serving (DESIGN.md §11): the engine models a drifting chip
+# (one drift realization per decode step, clocked by request count),
+# watches its own logit statistics, and re-fits the per-column scales in
+# service — digit planes untouched, no repack.
+from repro.core.variation import DriftSchedule  # noqa: E402
+from repro.serve import DriftMonitor, HealthConfig  # noqa: E402
+
+schedule = DriftSchedule(cell_rate=2e-3, col_rate=1.5e-2)
+heal = engine_from_artifact(
+    loaded_path_artifact, cfg, batch_size=B, max_len=128,
+    drift_key=jax.random.PRNGKey(7), drift_schedule=schedule,
+    health=DriftMonitor(HealthConfig(warmup=6)))
+_ = heal.generate_batch(prompts, 12)       # clean-ish: calibrates baseline
+heal.t = 400                               # fast-forward the drift clock
+_ = heal.generate_batch(prompts, 12)       # drifted serving, monitored
+snap = heal.health()
+print(f"[serve] drift score {snap['score']:.2f} at t={snap['t']} "
+      f"(drifted={snap['drifted']}, fallback={snap['fallback_active']})")
+delta = heal.recalibrate(probes=16)
+print(f"[serve] recalibrated: ScaleDelta v{delta.delta_version} over "
+      f"{len(delta.gains)} CIM nodes, health score reset to "
+      f"{heal.health()['score']:.2f}")

@@ -28,14 +28,16 @@ from repro.core.cim_linear import _init_linear as init_linear
 from repro.core.cim_linear import _linear_forward as linear
 from repro.core.cim_linear import _pack_linear as pack_linear
 
-from .artifact import (ARTIFACT_LAYOUT_VERSION, DeployArtifact,
+from .artifact import (ARTIFACT_LAYOUT_VERSION, SCALE_DELTA_VERSION,
+                       ArtifactVersionError, DeployArtifact,
                        col_shard_axes, model_artifact, pack_model)
 from .backends import (Backend, get_backend, is_packed, register_backend,
                        registered_backends)
 from .handles import QuantConv2d, QuantLinear, Variation
 
 __all__ = [
-    "ARTIFACT_LAYOUT_VERSION", "Backend", "CIMConfig", "DeployArtifact",
+    "ARTIFACT_LAYOUT_VERSION", "ArtifactVersionError", "Backend", "CIMConfig",
+    "DeployArtifact", "SCALE_DELTA_VERSION",
     "QuantConv2d", "QuantLinear", "Variation", "calibrate_conv",
     "calibrate_linear", "col_shard_axes", "conv2d", "get_backend",
     "init_conv", "init_linear", "is_packed", "linear", "model_artifact",

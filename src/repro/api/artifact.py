@@ -34,10 +34,47 @@ import jax.numpy as jnp
 from repro.checkpoint import ckpt as _ckpt
 from repro.core.cim_conv import _pack_conv
 from repro.core.cim_linear import CIMConfig, _pack_linear
+from repro.core.variation import path_fold_key
 
-ARTIFACT_LAYOUT_VERSION = 1
+# Layout 2 adds the optional per-node ``deq_scale`` leaf (in-service
+# recalibration, eval/recalibrate.py); readers of 2 still read 1.
+ARTIFACT_LAYOUT_VERSION = 2
+
+# Version of the ScaleDelta side-artifact format (eval/recalibrate.py).
+# Stamped into a delta at fit time and into ``artifact.meta`` at apply
+# time; load() refuses artifacts recalibrated by a newer delta format.
+SCALE_DELTA_VERSION = 1
+
+# Which PR introduced each on-disk format version — named in version-
+# mismatch errors so "which side is stale" is answerable from the message.
+_LAYOUT_WRITERS = {1: "PR 3 (lifecycle API)", 2: "PR 6 (self-healing serving)"}
+_DELTA_WRITERS = {1: "PR 6 (self-healing serving)"}
 
 _KINDS = ("linear", "conv", "model")
+
+
+class ArtifactVersionError(ValueError):
+    """A DeployArtifact or ScaleDelta carries a format version this build
+    cannot honor — too new to read, or (for a ScaleDelta) fitted against
+    a different artifact layout than the one it is being applied to.
+    Subclasses ValueError for compatibility with callers that caught the
+    old untyped load error. Carries ``field``/``found``/``supported`` so
+    tooling can triage without parsing the message."""
+
+    def __init__(self, what: str, field: str, found, supported: int, *,
+                 writers: Optional[Dict[int, str]] = None, relation: str = "<=",
+                 detail: str = ""):
+        self.field, self.found, self.supported = field, found, supported
+        writers = writers or {}
+        by = writers.get(found) if isinstance(found, int) else None
+        ours = writers.get(supported)
+        msg = (f"{what} has {field} {found!r}"
+               + (f" (written by {by})" if by else "")
+               + f"; this build expects {field} {relation} {supported}"
+               + (f" (writer: {ours})" if ours else "") + ".")
+        if detail:
+            msg += " " + detail
+        super().__init__(msg)
 
 
 def _packed_config(cfg: CIMConfig) -> CIMConfig:
@@ -124,16 +161,24 @@ class DeployArtifact:
             head = json.load(f)
         version = head.get("layout_version")
         if version is None or version > ARTIFACT_LAYOUT_VERSION:
-            raise ValueError(
-                f"artifact at {path} has layout_version {version!r}; this "
-                f"build reads versions <= {ARTIFACT_LAYOUT_VERSION}. "
-                "Upgrade the repro library or re-pack the artifact.")
+            raise ArtifactVersionError(
+                f"artifact at {path}", "layout_version", version,
+                ARTIFACT_LAYOUT_VERSION, writers=_LAYOUT_WRITERS,
+                detail="Upgrade the repro library or re-pack the artifact.")
+        meta = dict(head.get("meta", {}))
+        dv = meta.get("delta_version")
+        if dv is not None and dv > SCALE_DELTA_VERSION:
+            raise ArtifactVersionError(
+                f"artifact at {path} (recalibrated)", "delta_version", dv,
+                SCALE_DELTA_VERSION, writers=_DELTA_WRITERS,
+                detail="Upgrade the repro library or re-fit the ScaleDelta "
+                       "with eval/recalibrate.py.")
         cfg = CIMConfig(**head["config"])
         params = _ckpt.restore_tree(path, step=0)
         if mesh is None:
             params = jax.tree.map(jnp.asarray, params)
         art = cls(kind=head["kind"], config=cfg, params=params,
-                  layout_version=version, meta=dict(head.get("meta", {})))
+                  layout_version=version, meta=meta)
         if mesh is not None:
             # shard() device_puts straight from the restored host (numpy)
             # buffers: each device receives only its own column slice; the
@@ -183,13 +228,8 @@ def _is_cim_layer(node: Dict) -> bool:
             and getattr(node["w"], "ndim", 0) >= 2)
 
 
-def _path_key(key: jax.Array, path: tuple) -> jax.Array:
-    h = 0
-    for part in path:
-        for ch in str(part):
-            h = (h * 131 + ord(ch)) % (2 ** 31 - 1)
-        h = (h * 131 + 7) % (2 ** 31 - 1)
-    return jax.random.fold_in(key, h)
+# per-node key derivation shared with drift injection and delta fitting
+_path_key = path_fold_key
 
 
 def pack_model(params: Dict, cfg: CIMConfig, *,

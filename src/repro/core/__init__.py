@@ -14,15 +14,19 @@ from .cim_linear import (CIMConfig, calibrate_cim, cim_linear, init_cim_linear,
 from .granularity import ArrayTiling, Granularity, conv_tiling, n_splits
 from .quantizer import (init_scale_from, lsq_fake_quant, lsq_integer, qrange,
                         round_ste)
-from .variation import (apply_cell_variation, perturb_digits, perturb_packed,
-                        variation_noise)
+from .variation import (DriftSchedule, DriftState, apply_cell_variation,
+                        drift_field, drift_tree, path_fold_key,
+                        perturb_digits, perturb_packed, variation_noise)
 
 __all__ = [
-    "ArrayTiling", "CIMConfig", "Granularity", "apply_cell_variation",
+    "ArrayTiling", "CIMConfig", "DriftSchedule", "DriftState", "Granularity",
+    "apply_cell_variation",
     "calibrate_cim", "calibrate_cim_conv", "cim_conv2d", "cim_linear",
     "conv_dequant_muls",
-    "conv_tiling", "init_cim_conv", "init_cim_linear", "init_scale_from",
+    "conv_tiling", "drift_field", "drift_tree", "init_cim_conv",
+    "init_cim_linear", "init_scale_from",
     "lsq_fake_quant", "lsq_integer", "n_splits", "pack_deploy",
-    "pack_deploy_conv", "perturb_digits", "perturb_packed", "place_values",
-    "qrange", "recombine", "round_ste", "split_digits", "variation_noise",
+    "pack_deploy_conv", "path_fold_key", "perturb_digits", "perturb_packed",
+    "place_values", "qrange", "recombine", "round_ste", "split_digits",
+    "variation_noise",
 ]

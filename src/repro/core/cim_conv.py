@@ -261,6 +261,10 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
     s_w = t.broadcast_weight_scale(params["s_w"])            # (kt, co)
     places = place_values(cfg.weight_bits, cfg.cell_bits)    # (S,)
     deq = places[:, None, None] * s_w[None] * jnp.maximum(s_a, 1e-9)
+    if "deq_scale" in params:
+        # in-service recalibration correction (eval/recalibrate.py): a
+        # per-column dequant gain shipped as a ScaleDelta, (S, kt, co)
+        deq = deq * params["deq_scale"]
 
     y = kops.cim_conv(
         a_int, digits, s_p, deq,

@@ -339,6 +339,10 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
     s_w = _full_weight_scale(params, t)
     places = place_values(cfg.weight_bits, cfg.cell_bits)
     deq = places[:, None, None] * s_w[None] * jnp.maximum(s_a, 1e-9)
+    if "deq_scale" in params:
+        # in-service recalibration correction (eval/recalibrate.py): a
+        # per-column dequant gain shipped as a ScaleDelta, (S, kt, N)
+        deq = deq * params["deq_scale"]
 
     y = kops.cim_matmul(
         a_t, digits, s_p, deq,

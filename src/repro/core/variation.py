@@ -22,19 +22,132 @@ a Monte-Carlo sweep jit one evaluation function and feed the whole sigma
 grid as data — no recompile per noise level. The zero-noise fast path
 (skip the normal draw entirely) applies only when sigma is a *static*
 Python number <= 0 or the key is None.
+
+Temporal drift (DESIGN.md §11): ``sigma`` may also be a ``DriftState`` —
+a ``DriftSchedule`` (static rates) plus a request-count clock ``t``
+(traced leaf). Everywhere a sigma flows (the forward arguments, the
+kernel wrappers, ``perturb_packed``) a DriftState flows identically;
+``variation_noise`` dispatches on the type, so the one bit-exactness
+contract above covers drift too: the drift field is drawn in the packed
+layout from the shared key, and emulate/deploy/sharded agree bit-exactly
+at every ``t``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-Sigma = Union[float, jnp.ndarray]
+Sigma = Union[float, jnp.ndarray, "DriftState"]
+
+# key-derivation tags for the independent drift field components
+_READ_TAG = 0x0D1F7001
+_CELL_TAG = 0x0D1F7002
+_COL_TAG = 0x0D1F7003
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSchedule:
+    """Sigma schedule of a time-indexed drift process, indexed by the
+    request count ``t`` (decode steps served). Three independent
+    log-normal components compose multiplicatively on the cell
+    conductances (all sigmas in log-space, like ``variation_std``):
+
+      read      transient read noise, resampled every request:
+                sigma_read(t) = read_sigma + read_rate * t (aging makes
+                reads noisier); theta re-drawn per t.
+      cell      persistent per-cell bias that accumulates with use:
+                sigma_cell(t) = cell_rate * t; theta frozen per cell —
+                the same realization at every t, only its magnitude
+                grows. This is what retention/endurance drift looks like.
+      column    persistent per-*column* gain drift, sigma_col(t) =
+                col_rate * t; one theta per physical array column
+                (split, k_tile, column), shared by every cell on the
+                bitline — shared read-path/ADC-reference aging. This is
+                the component the paper's column-wise scale factors can
+                absorb exactly, and what in-service recalibration re-fits
+                (eval/recalibrate.py) without touching digit planes.
+    """
+
+    read_sigma: float = 0.0
+    read_rate: float = 0.0
+    cell_rate: float = 0.0
+    col_rate: float = 0.0
+
+    @property
+    def is_static_zero(self) -> bool:
+        return (self.read_sigma <= 0.0 and self.read_rate <= 0.0
+                and self.cell_rate <= 0.0 and self.col_rate <= 0.0)
+
+    def at(self, t) -> "DriftState":
+        return DriftState(schedule=self, t=jnp.asarray(t, jnp.int32))
+
+
+@dataclasses.dataclass
+class DriftState:
+    """A DriftSchedule evaluated at request count ``t``. Registered as a
+    pytree with ``t`` as the (traceable) leaf and the schedule as static
+    aux data, so a jitted forward can sweep t — or advance the serving
+    clock — with zero recompiles. Pass it wherever a ``variation_std``
+    sigma is accepted."""
+
+    schedule: DriftSchedule
+    t: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    DriftState,
+    lambda d: ((d.t,), d.schedule),
+    lambda sched, leaves: DriftState(schedule=sched, t=leaves[0]),
+)
+
+
+def _column_field_shape(shape) -> tuple:
+    """The per-column broadcast shape for a packed digit-plane shape:
+    row dims collapse to 1, one theta per (split, k_tile, column).
+    Packed layouts are (S, kt, rows..., N) — linear 4-D, conv 6-D — with
+    an optional leading layer axis for the stacked scan-over-layers
+    forms (5-D / 7-D)."""
+    lead = 1 if len(shape) in (5, 7) else 0
+    return (tuple(shape[:lead + 2]) + (1,) * (len(shape) - lead - 3)
+            + (shape[-1],))
+
+
+def drift_field(key: jax.Array, shape, state: DriftState) -> jnp.ndarray:
+    """Multiplicative drift factor over a packed digit-plane shape at
+    request count ``state.t``: exp of the sum of the active components'
+    log-fields. Persistent components (cell, column) draw their theta
+    from t-independent keys — the realization is frozen, only its
+    magnitude grows — while the read component folds ``t`` into its key
+    and resamples every request. Statically-zero components skip their
+    draw entirely, so a column-only schedule never materializes a
+    full-plane normal."""
+    sch = state.schedule
+    tf = jnp.asarray(state.t, jnp.float32)
+    log_f = jnp.zeros((1,) * len(shape), jnp.float32)
+    if sch.read_sigma > 0.0 or sch.read_rate > 0.0:
+        k_read = jax.random.fold_in(jax.random.fold_in(key, _READ_TAG),
+                                    jnp.asarray(state.t, jnp.int32))
+        log_f = log_f + ((sch.read_sigma + sch.read_rate * tf)
+                         * jax.random.normal(k_read, shape, jnp.float32))
+    if sch.cell_rate > 0.0:
+        k_cell = jax.random.fold_in(key, _CELL_TAG)
+        log_f = log_f + ((sch.cell_rate * tf)
+                         * jax.random.normal(k_cell, shape, jnp.float32))
+    if sch.col_rate > 0.0:
+        k_col = jax.random.fold_in(key, _COL_TAG)
+        theta_col = jax.random.normal(k_col, _column_field_shape(shape),
+                                      jnp.float32)
+        log_f = log_f + (sch.col_rate * tf) * theta_col
+    return jnp.exp(log_f)
 
 
 def is_static_zero(sigma: Optional[Sigma]) -> bool:
     """True when sigma is statically known to disable variation."""
+    if isinstance(sigma, DriftState):
+        return sigma.schedule.is_static_zero
     return sigma is None or (isinstance(sigma, (int, float)) and sigma <= 0.0)
 
 
@@ -45,7 +158,12 @@ def variation_wanted(key: Optional[jax.Array], sigma: Optional[Sigma]) -> bool:
 
 
 def variation_noise(key: jax.Array, shape, sigma: Sigma) -> jnp.ndarray:
-    """Multiplicative log-normal factor exp(sigma * N(0, 1)), float32."""
+    """Multiplicative log-normal factor exp(sigma * N(0, 1)), float32.
+    When ``sigma`` is a ``DriftState`` the factor is the composed drift
+    field at its request count instead (see ``drift_field``); the result
+    broadcasts against ``shape``."""
+    if isinstance(sigma, DriftState):
+        return drift_field(key, shape, sigma)
     theta = jax.random.normal(key, shape, dtype=jnp.float32)
     return jnp.exp(jnp.asarray(sigma, jnp.float32) * theta)
 
@@ -95,3 +213,46 @@ def perturb_packed(packed: Dict[str, jnp.ndarray], key: jax.Array,
     out = dict(packed)
     out["w_digits"] = perturb_digits(packed["w_digits"], key, sigma)
     return out
+
+
+# ---------------------------------------------------------------------------
+# whole-tree drift injection (the serving engine's chip model)
+# ---------------------------------------------------------------------------
+
+def path_fold_key(key: jax.Array, path) -> jax.Array:
+    """Derive a per-node key from a tree path (tuple of parts), stable
+    under tree growth — the same hash ``repro.api.pack_model`` folds for
+    per-layer variation baking, exported so drift injection and scale-
+    delta fitting key nodes identically across processes."""
+    h = 0
+    for part in path:
+        for ch in str(part):
+            h = (h * 131 + ord(ch)) % (2 ** 31 - 1)
+        h = (h * 131 + 7) % (2 ** 31 - 1)
+    return jax.random.fold_in(key, h)
+
+
+def drift_tree(params, key: jax.Array, state: DriftState):
+    """One chip realization of a whole packed model tree at request count
+    ``state.t``: every packed CIM node's ``w_digits`` planes are
+    perturbed by the drift field (float32), keyed per node by
+    ``path_fold_key`` — scales, metadata and full-precision nodes pass
+    through untouched, and the int planes are never re-packed. Works on
+    linear/conv nodes and their stacked scan-over-layers forms alike
+    (the field's column component reads the layout from the plane rank).
+
+    Deterministic in (key, t, tree paths): the same call under a column-
+    sharded mesh draws the same field values, so sharded and unsharded
+    serving drift bit-identically (tests assert)."""
+    if is_static_zero(state):
+        return params
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "w_digits" in node:
+                return perturb_packed(node, path_fold_key(key, path), state)
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+        return node
+    return walk(params, ())

@@ -3,12 +3,22 @@
 ``repro.eval.robustness`` is the Monte-Carlo cell-variation subsystem
 (paper §IV-E / Fig. 10): sigma-grid sweeps of accuracy and partial-sum
 error on the fused Pallas deploy path, with per-layer error attribution.
+
+``repro.eval.recalibrate`` is the in-service recalibration subsystem
+(DESIGN.md §11): probe-based re-fitting of the column-wise scale factors
+against an observed (drifted) chip, shipped as a versioned ``ScaleDelta``
+applied to a loaded ``DeployArtifact`` without touching the digit planes.
 """
+from .recalibrate import (ScaleDelta, apply_scale_delta,
+                          apply_scale_delta_params, fit_scale_delta,
+                          node_gain)
 from .robustness import (LayerAttribution, RobustnessSweep,
                          monte_carlo_linear_error, monte_carlo_resnet,
                          per_layer_attribution)
 
 __all__ = [
-    "LayerAttribution", "RobustnessSweep", "monte_carlo_linear_error",
-    "monte_carlo_resnet", "per_layer_attribution",
+    "LayerAttribution", "RobustnessSweep", "ScaleDelta",
+    "apply_scale_delta", "apply_scale_delta_params", "fit_scale_delta",
+    "monte_carlo_linear_error", "monte_carlo_resnet", "node_gain",
+    "per_layer_attribution",
 ]

@@ -1,0 +1,285 @@
+"""In-service column-scale recalibration (DESIGN.md §11).
+
+The paper's independent column-wise scale factors absorb cell variation
+at QAT time (§IV-E, Eq. 5); this module re-fits them *in the field*
+against conductance drift, without touching the packed digit planes —
+the serving analogue of on-chip finetuning restricted to the cheapest
+parameter set the architecture exposes.
+
+The fit treats every physical array column as a one-parameter channel:
+probe row-codes drive both the pristine planes and the drifted planes
+through the same column MAC, and the least-squares gain
+
+    g[s, t, n] = sum_p P_ref * P_obs / sum_p P_ref^2
+
+maps clean partial sums to drifted ones per (split, k_tile, column).
+Column-gain drift (the component a bitline/ADC ages coherently) is
+recovered *exactly* — the psum is linear in the column's cells — while
+incoherent per-cell drift is absorbed in the least-squares sense.
+
+A fitted ``ScaleDelta`` corrects the serving arithmetic in two places:
+``s_p' = s_p * g`` re-centers the ADC range on the drifted partial sums
+(reduced to the psum-scale granularity when coarser than COLUMN), and
+``deq_scale = 1/g`` (a new, optional packed-node leaf the deploy
+forwards consume) divides the gain back out of the dequantized output.
+Net effect under pure column drift: clean outputs, to float rounding.
+
+Deltas are **absolute**: fitted against the pristine artifact and
+applied to the pristine artifact. They version independently of the
+artifact layout (``SCALE_DELTA_VERSION``) and are persisted through the
+artifact's own leaf store, so the round trip is bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.artifact import (ARTIFACT_LAYOUT_VERSION, SCALE_DELTA_VERSION,
+                                _DELTA_WRITERS, _LAYOUT_WRITERS,
+                                ArtifactVersionError, DeployArtifact)
+from repro.checkpoint import ckpt as _ckpt
+from repro.core.variation import path_fold_key
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDelta:
+    """A versioned column-gain correction for one packed model tree.
+
+    ``gains`` maps '/'-joined packed-node paths (the same paths
+    ``meta["col_shard"]`` records) to the fitted per-column psum gain,
+    shaped like the node's full psum scale — (S, kt, N), with a leading
+    layer axis for stacked nodes. ``layout_version`` pins the artifact
+    layout the delta was fitted against; applying it to an artifact of a
+    different layout raises ``ArtifactVersionError``.
+    """
+
+    gains: Dict[str, np.ndarray]
+    delta_version: int = SCALE_DELTA_VERSION
+    layout_version: int = ARTIFACT_LAYOUT_VERSION
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- persistence (artifact leaf store + header, like DeployArtifact) ----
+
+    def save(self, path: str) -> str:
+        os.makedirs(path, exist_ok=True)
+        stale = os.path.join(path, "delta.json")
+        if os.path.exists(stale):
+            os.remove(stale)
+        _ckpt.save(path, 0, {"gains": dict(self.gains)})
+        head = {
+            "format": "repro.eval.ScaleDelta",
+            "delta_version": self.delta_version,
+            "layout_version": self.layout_version,
+            "meta": self.meta,
+        }
+        jpath = os.path.join(path, "delta.json")
+        tmp = jpath + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(head, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, jpath)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ScaleDelta":
+        jpath = os.path.join(path, "delta.json")
+        if not os.path.exists(jpath):
+            raise FileNotFoundError(f"{path} is not a ScaleDelta "
+                                    "(no delta.json)")
+        with open(jpath) as f:
+            head = json.load(f)
+        dv = head.get("delta_version")
+        if dv is None or dv > SCALE_DELTA_VERSION:
+            raise ArtifactVersionError(
+                f"ScaleDelta at {path}", "delta_version", dv,
+                SCALE_DELTA_VERSION, writers=_DELTA_WRITERS)
+        tree = _ckpt.restore_tree(path, step=0)
+        gains = {k: np.asarray(v) for k, v in tree["gains"].items()}
+        return cls(gains=gains, delta_version=dv,
+                   layout_version=head["layout_version"],
+                   meta=dict(head.get("meta", {})))
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+def _row_flat(planes: jnp.ndarray) -> jnp.ndarray:
+    """Packed planes -> (lead?, S, kt, R, N) float32, rows flattened
+    row-major (identical order on the 4-D linear and 6-D conv layouts)."""
+    lead = 1 if planes.ndim in (5, 7) else 0
+    shape = planes.shape
+    rows = int(np.prod(shape[lead + 2:-1]))
+    flat = (shape[:lead + 2] + (rows, shape[-1]))
+    return planes.astype(jnp.float32).reshape(flat)
+
+
+def _gain_4d(d_ref, d_obs, codes):
+    """Least-squares per-column gain from probe codes (P, kt, R) driving
+    (S, kt, R, N) pristine and observed planes -> (S, kt, N)."""
+    p_ref = jnp.einsum("ptr,strn->pstn", codes, d_ref)
+    p_obs = jnp.einsum("ptr,strn->pstn", codes, d_obs)
+    num = jnp.sum(p_ref * p_obs, axis=0)
+    den = jnp.sum(p_ref * p_ref, axis=0)
+    # all-zero columns (padding, dead filters) carry no signal: gain 1
+    return jnp.where(den > _EPS, num / jnp.maximum(den, _EPS), 1.0)
+
+
+def node_gain(ref_planes, obs_planes, *, key: Optional[jax.Array] = None,
+              probes: int = 32, codes=None) -> jnp.ndarray:
+    """Fit one packed node's per-column gain. ``codes`` (P, kt, R) are
+    the probe rows — activation codes replayed from recent requests, or
+    (default) Rademacher +-1 probes drawn from ``key``. Stacked nodes
+    (leading layer axis) share the codes and vmap the fit."""
+    d_ref, d_obs = _row_flat(ref_planes), _row_flat(obs_planes)
+    kt, rows = d_ref.shape[-3], d_ref.shape[-2]
+    if codes is None:
+        if key is None:
+            raise ValueError("node_gain needs `codes` or a probe `key`")
+        codes = jax.random.rademacher(key, (probes, kt, rows), jnp.float32)
+    codes = jnp.asarray(codes, jnp.float32)
+    if d_ref.ndim == 5:
+        return jax.vmap(_gain_4d, in_axes=(0, 0, None))(d_ref, d_obs, codes)
+    return _gain_4d(d_ref, d_obs, codes)
+
+
+def fit_scale_delta(reference, observed, *, key: Optional[jax.Array] = None,
+                    probes: int = 32,
+                    codes: Optional[Mapping[str, Any]] = None,
+                    meta: Optional[Dict[str, Any]] = None) -> ScaleDelta:
+    """Fit a ``ScaleDelta`` mapping ``reference`` (pristine packed tree,
+    or a ``DeployArtifact``) to ``observed`` (the same tree with drifted
+    planes — e.g. ``core.variation.drift_tree`` output, or planes read
+    back from a real chip).
+
+    ``codes`` optionally supplies per-node replay probe codes
+    ({'/'-joined path: (P, kt, R)}); nodes without an entry fall back to
+    Rademacher probes keyed per node by ``path_fold_key(key, path)``.
+    """
+    layout = ARTIFACT_LAYOUT_VERSION
+    if isinstance(reference, DeployArtifact):
+        layout = reference.layout_version
+        reference = reference.params
+    if isinstance(observed, DeployArtifact):
+        observed = observed.params
+    gains: Dict[str, np.ndarray] = {}
+
+    def walk(ref, obs, path):
+        if isinstance(ref, dict):
+            if "w_digits" in ref:
+                name = "/".join(path)
+                node_codes = codes.get(name) if codes else None
+                k = None if key is None else path_fold_key(key, path)
+                g = node_gain(ref["w_digits"], obs["w_digits"], key=k,
+                              probes=probes, codes=node_codes)
+                gains[name] = np.asarray(g)
+                return
+            for k2 in ref:
+                walk(ref[k2], obs[k2], path + (k2,))
+        elif isinstance(ref, (list, tuple)):
+            for i, v in enumerate(ref):
+                walk(v, obs[i], path + (str(i),))
+    walk(reference, observed, ())
+    return ScaleDelta(gains=gains, layout_version=layout,
+                      meta=dict(meta or {}))
+
+
+# ---------------------------------------------------------------------------
+# application
+# ---------------------------------------------------------------------------
+
+def _reduce_to(g: jnp.ndarray, shape) -> jnp.ndarray:
+    """Reduce a full (…, S, kt, N) gain to a coarser psum-scale shape
+    (ARRAY/LAYER granularities) by averaging the broadcast group. The
+    range re-centering becomes approximate there; the exact correction
+    still lands in ``deq_scale``, which is always full-column."""
+    if tuple(g.shape) == tuple(shape):
+        return g
+    for ax in range(-1, -len(shape) - 1, -1):
+        if g.shape[ax] != shape[ax]:
+            g = g.mean(axis=ax, keepdims=True)
+    return jnp.broadcast_to(g, shape)
+
+
+def _placed_like(arr: jnp.ndarray, ref) -> jnp.ndarray:
+    """Place ``arr`` carrying ``ref``'s *column* sharding (both end in
+    the column axis, whatever their ranks) — on a column-sharded
+    artifact every device receives, and later multiplies, only its own
+    column slice of the gain; ragged/replicated nodes replicate."""
+    sh = getattr(ref, "sharding", None)
+    spec = getattr(sh, "spec", None)
+    if spec is None or getattr(sh, "mesh", None) is None:
+        return jnp.asarray(arr)
+    try:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        col = spec[-1] if len(spec) else None
+        new_spec = P(*([None] * (arr.ndim - 1) + [col]))
+        return jax.device_put(arr, NamedSharding(sh.mesh, new_spec))
+    except (ValueError, TypeError):
+        return jnp.asarray(arr)
+
+
+def apply_scale_delta_params(params, delta: ScaleDelta):
+    """Apply a delta to a pristine packed tree: per fitted node,
+    ``s_p *= reduce(g)`` and ``deq_scale = 1/g``; digit planes and every
+    other leaf pass through untouched (same objects — no copies). Nodes
+    the delta does not name are left alone."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            name = "/".join(path)
+            if "w_digits" in node and name in delta.gains:
+                g = jnp.asarray(delta.gains[name], jnp.float32)
+                out = dict(node)
+                s_p = node["s_p"]
+                g_sp = _placed_like(np.asarray(_reduce_to(g, s_p.shape)), s_p)
+                out["s_p"] = (s_p.astype(jnp.float32) * g_sp
+                              ).astype(s_p.dtype)
+                out["deq_scale"] = _placed_like(
+                    np.asarray(1.0 / g, np.float32), node["w_digits"])
+                return out
+            if "w_digits" in node:
+                return node
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+        return node
+    return walk(params, ())
+
+
+def apply_scale_delta(artifact: DeployArtifact,
+                      delta: ScaleDelta) -> DeployArtifact:
+    """Apply a ``ScaleDelta`` to a loaded (possibly column-sharded)
+    ``DeployArtifact``. Deltas are absolute w.r.t. the pristine artifact
+    they were fitted from: re-applying on top of an already-recalibrated
+    artifact would compound gains, so that is refused. Version pinning:
+    a delta fitted against a different artifact layout, or written by a
+    newer delta format, raises ``ArtifactVersionError``."""
+    if delta.delta_version > SCALE_DELTA_VERSION:
+        raise ArtifactVersionError(
+            "ScaleDelta", "delta_version", delta.delta_version,
+            SCALE_DELTA_VERSION, writers=_DELTA_WRITERS)
+    if delta.layout_version != artifact.layout_version:
+        raise ArtifactVersionError(
+            "ScaleDelta (stale)", "layout_version", delta.layout_version,
+            artifact.layout_version, writers=_LAYOUT_WRITERS,
+            relation="==",
+            detail="The delta was fitted against a different artifact "
+                   "layout; re-fit it against this artifact.")
+    if "delta_version" in artifact.meta:
+        raise ValueError(
+            "apply_scale_delta: artifact already carries a ScaleDelta "
+            "(meta['delta_version'] set); deltas are absolute — apply to "
+            "the pristine artifact instead of compounding.")
+    params = apply_scale_delta_params(artifact.params, delta)
+    meta = {**artifact.meta, "delta_version": delta.delta_version,
+            "recal": dict(delta.meta)}
+    return dataclasses.replace(artifact, params=params, meta=meta)

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.api import conv2d, linear
 from repro.core.cim_linear import CIMConfig
+from repro.core.variation import DriftSchedule
 from repro.models import resnet
 
 
@@ -123,12 +124,24 @@ def monte_carlo_resnet(
     sigmas: Sequence[float] = (0.0, 0.1, 0.2, 0.3, 0.4),
     n_samples: int = 4,
     batch: int = 128,
+    drift_schedule: Optional[DriftSchedule] = None,
+    drift_ts: Sequence[int] = (0, 64, 128, 256, 512),
 ) -> RobustnessSweep:
     """Sigma-grid Monte-Carlo accuracy/logit-error sweep of a (packed,
     deploy-mode) ResNet. ``params`` is the ``repro.api.pack_model`` tree and
     ``cfg.cim.mode`` should be "deploy" so the sweep exercises the fused
     Pallas kernels; the same call also accepts emulate params/cfg for
-    cross-path comparisons."""
+    cross-path comparisons.
+
+    With ``drift_schedule`` the sweep runs over the time-indexed drift
+    process instead of the static sigma grid: the grid axis becomes
+    ``drift_ts`` (request counts; reported in ``RobustnessSweep.sigmas``)
+    and each evaluation perturbs with ``drift_schedule.at(t)``. The
+    traced-scalar trick carries over — ``t`` is the DriftState's only
+    leaf, so one jitted step serves the whole time grid — and so does
+    CRN: sample ``i``'s persistent cell/column fields are shared across
+    every ``t`` by construction (they are keyed independently of ``t``),
+    so the time-monotonicity of the drift curve is sampling-noise-free."""
 
     @jax.jit
     def _logits(xb, k, sigma):
@@ -150,23 +163,34 @@ def monte_carlo_resnet(
     clean_sq = sum(float(jnp.sum(lg.astype(jnp.float32) ** 2))
                    for lg in clean)
 
-    acc = np.zeros((len(sigmas), n_samples))
-    err = np.zeros((len(sigmas), n_samples))
+    if drift_schedule is not None:
+        grid = tuple(int(t) for t in drift_ts)
+        skip_clean = drift_schedule.is_static_zero
+
+        def _std(g):
+            return drift_schedule.at(jnp.int32(g))
+    else:
+        grid = tuple(float(s) for s in sigmas)
+
+    acc = np.zeros((len(grid), n_samples))
+    err = np.zeros((len(grid), n_samples))
     for i in range(n_samples):
         k_i = jax.random.fold_in(key, i)
-        for si, sigma in enumerate(sigmas):
-            if sigma <= 0.0:
+        for si, g in enumerate(grid):
+            if (drift_schedule is None and g <= 0.0) or (
+                    drift_schedule is not None and skip_clean):
                 acc[si, i] = acc_clean
                 continue
+            std = _std(g) if drift_schedule is not None else jnp.float32(g)
             correct, diff_sq = 0, 0.0
             for xb, yb, lg_c in zip(xb_list, yb_list, clean):
-                lg = _logits(xb, k_i, jnp.float32(sigma))
+                lg = _logits(xb, k_i, std)
                 correct += int((np.asarray(jnp.argmax(lg, -1)) == yb).sum())
                 diff_sq += float(jnp.sum(
                     (lg.astype(jnp.float32) - lg_c.astype(jnp.float32)) ** 2))
             acc[si, i] = correct / n
             err[si, i] = np.sqrt(diff_sq) / (np.sqrt(clean_sq) + 1e-12)
-    return RobustnessSweep(sigmas=tuple(float(s) for s in sigmas),
+    return RobustnessSweep(sigmas=tuple(float(g) for g in grid),
                            n_samples=n_samples, acc=acc, logit_err=err,
                            acc_clean=acc_clean)
 

@@ -15,6 +15,13 @@ devices first:
 ``--artifact PATH`` serves a saved ``DeployArtifact`` instead of packing
 fresh random-init weights; with ``--mesh`` the planes are placed
 shard-by-shard as they come off disk.
+
+Self-healing serving (DESIGN.md §11): ``--drift-col-rate`` /
+``--drift-cell-rate`` / ``--drift-read-sigma`` serve a drifting chip
+(one keyed realization per decode step, clocked from ``--drift-t0``),
+``--health`` arms the ``DriftMonitor``, and ``--auto-recal`` closes the
+loop — past the hard threshold the engine re-fits the per-column scales
+in place instead of degrading to the digital fallback.
 """
 from __future__ import annotations
 
@@ -44,13 +51,44 @@ def main(argv=None):
                     help="path to a packed model DeployArtifact to serve "
                          "(implies the artifact's pinned deploy backend)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--drift-col-rate", type=float, default=0.0,
+                    help="per-request column-gain drift rate "
+                         "(core.variation.DriftSchedule.col_rate)")
+    ap.add_argument("--drift-cell-rate", type=float, default=0.0,
+                    help="per-request per-cell drift rate")
+    ap.add_argument("--drift-read-sigma", type=float, default=0.0,
+                    help="static read-noise sigma (re-drawn every step)")
+    ap.add_argument("--drift-t0", type=int, default=0,
+                    help="initial request count on the drift clock")
+    ap.add_argument("--health", action="store_true",
+                    help="arm the DriftMonitor and print the engine "
+                         "health() snapshot after generation")
+    ap.add_argument("--auto-recal", action="store_true",
+                    help="recalibrate column scales automatically on "
+                         "hard drift instead of serving the fallback")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import get_config
     from repro.core.cim_linear import CIMConfig
+    from repro.core.variation import DriftSchedule
     from repro.models.registry import get_model
     from repro.nn.module import init_params
     from repro.serve.engine import ServingEngine, engine_from_artifact
+    from repro.serve.health import DriftMonitor
+
+    drift_kw = {}
+    drifting = (args.drift_col_rate or args.drift_cell_rate
+                or args.drift_read_sigma)
+    if drifting:
+        drift_kw["drift_key"] = jax.random.fold_in(
+            jax.random.PRNGKey(args.seed), 0xD81F)
+        drift_kw["drift_schedule"] = DriftSchedule(
+            read_sigma=args.drift_read_sigma,
+            cell_rate=args.drift_cell_rate,
+            col_rate=args.drift_col_rate)
+    if args.health or args.auto_recal:
+        drift_kw["health"] = DriftMonitor()
+        drift_kw["auto_recalibrate"] = args.auto_recal
 
     mesh = None
     if args.mesh > 1:
@@ -76,7 +114,7 @@ def main(argv=None):
         engine = engine_from_artifact(
             args.artifact, cfg, mesh=mesh, batch_size=args.batch,
             max_len=args.max_len, temperature=args.temperature,
-            seed=args.seed)
+            seed=args.seed, **drift_kw)
     elif args.cim == "deploy":
         # pack random-init emulate params into an in-memory artifact and
         # serve it — the same packed bytes + engine path a saved artifact
@@ -88,13 +126,18 @@ def main(argv=None):
         engine = engine_from_artifact(
             artifact, cfg, mesh=mesh, batch_size=args.batch,
             max_len=args.max_len, temperature=args.temperature,
-            seed=args.seed)
+            seed=args.seed, **drift_kw)
     else:
+        if drifting:
+            raise SystemExit("drift flags act on packed digit planes; use "
+                             "them with --cim deploy or --artifact")
         model = get_model(cfg)
         params = init_params(model.specs(cfg), jax.random.PRNGKey(args.seed))
         engine = ServingEngine(model, cfg, params, batch_size=args.batch,
                                max_len=args.max_len,
-                               temperature=args.temperature, seed=args.seed)
+                               temperature=args.temperature, seed=args.seed,
+                               **drift_kw)
+    engine.t = args.drift_t0
     rng = np.random.RandomState(args.seed)
     prompts = rng.randint(0, cfg.vocab, size=(args.batch, args.prompt_len)
                           ).astype(np.int32)
@@ -106,6 +149,8 @@ def main(argv=None):
     print(f"[serve] arch={args.arch} mesh={devs} generated {out.shape} "
           f"tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s)")
     print(f"[serve] sample continuation: {out[0][:16].tolist()}")
+    if args.health or args.auto_recal:
+        print(f"[serve] health: {engine.health()}")
     return 0
 
 

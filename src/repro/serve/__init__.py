@@ -1,5 +1,7 @@
 from .engine import (ServingEngine, engine_from_artifact, make_decode_step,
                      make_prefill)
+from .health import DriftMonitor, HealthConfig, logit_stats, tap_stats
 
-__all__ = ["ServingEngine", "engine_from_artifact", "make_decode_step",
-           "make_prefill"]
+__all__ = ["DriftMonitor", "HealthConfig", "ServingEngine",
+           "engine_from_artifact", "logit_stats", "make_decode_step",
+           "make_prefill", "tap_stats"]

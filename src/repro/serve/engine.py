@@ -8,6 +8,13 @@ queue without stalling the running batch — the standard continuous-
 batching pattern, kept deliberately simple (fixed max_len slab per slot;
 a paged KV allocator is an optimization, not a correctness need, and the
 SSM families carry O(1) state anyway).
+
+Self-healing serving (DESIGN.md §11): the engine optionally models a
+drifting chip (``drift_key`` + ``drift_schedule``) — every decode step
+serves one drift realization of the packed planes at the current request
+count — watches its own logit statistics through a ``DriftMonitor``
+(``health=``), degrades to the digital reference backend on hard drift,
+and re-fits per-column scales in place via ``recalibrate()``.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.variation import DriftSchedule, DriftState, drift_tree
 from repro.models.registry import ModelFns
 
 
@@ -45,11 +53,18 @@ def engine_from_artifact(artifact, cfg: ModelConfig, *, mesh=None,
 
     The session mesh is process-global and stays installed after this
     call (a serving process serves one mesh for its lifetime);
-    ``mesh=None`` does NOT clear a previously installed mesh. To mix
-    sharded and unsharded engines in one process — tests, benchmarks —
-    scope each engine's build *and* generation inside
+    ``mesh=None`` does NOT clear a previously installed mesh. The engine
+    records the mesh in scope at build time and **fails loudly** if a
+    later ``step``/``generate_batch`` runs under a different one — its
+    jitted functions trace against the build-time mesh, so silently
+    inheriting another would serve wrong shardings. To mix sharded and
+    unsharded engines in one process — tests, benchmarks — scope each
+    engine's build *and* generation inside
     ``repro.nn.module.session_mesh(mesh)`` (or call
     ``set_activation_rules(None, None)`` to tear down).
+
+    Drift/health keywords (``drift_key``, ``drift_schedule``, ``health``,
+    ``auto_recalibrate``) pass through to ``ServingEngine``.
     """
     from repro.api import DeployArtifact
     from repro.models.registry import get_model
@@ -66,7 +81,8 @@ def engine_from_artifact(artifact, cfg: ModelConfig, *, mesh=None,
         set_activation_rules(current_rules(), mesh)
     serve_cfg = dataclasses.replace(cfg, cim=artifact.config)
     model = get_model(serve_cfg)
-    return ServingEngine(model, serve_cfg, artifact.params, **engine_kw)
+    return ServingEngine(model, serve_cfg, artifact.params,
+                         layout_version=artifact.layout_version, **engine_kw)
 
 
 def make_prefill(model: ModelFns, cfg: ModelConfig):
@@ -90,6 +106,50 @@ def make_decode_step(model: ModelFns, cfg: ModelConfig,
     return jax.jit(step, donate_argnums=(1,))
 
 
+
+def _make_engine_step(model: ModelFns, cfg: ModelConfig, temperature: float,
+                     drift_key, schedule: Optional[DriftSchedule],
+                     with_stats: bool):
+    """Drift-aware decode step: injects one chip realization at request
+    count ``t`` (a traced scalar — the clock advances with zero
+    recompiles) and, when the health hook is armed, computes the logit
+    statistics the monitor ingests inside the same jit."""
+    drifting = (drift_key is not None and schedule is not None
+                and not schedule.is_static_zero)
+
+    def step(params, cache, tokens, key, t):
+        p = params
+        if drifting:
+            p = drift_tree(params, drift_key, DriftState(schedule, t))
+        logits, cache = model.decode_step(p, cache, tokens, cfg)
+        last = logits[:, -1, :].astype(jnp.float32)
+        if temperature > 0:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        stats = {}
+        if with_stats:
+            t2 = jax.lax.top_k(last, 2)[0]
+            stats = {"logit_mean": jnp.mean(last),
+                     "logit_var": jnp.var(last),
+                     "logit_margin": jnp.mean(t2[:, 0] - t2[:, 1])}
+        return nxt[:, None].astype(jnp.int32), cache, stats
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def _make_engine_prefill(model: ModelFns, cfg: ModelConfig, drift_key,
+                         schedule: Optional[DriftSchedule]):
+    drifting = (drift_key is not None and schedule is not None
+                and not schedule.is_static_zero)
+
+    def prefill(params, cache, tokens, t):
+        p = params
+        if drifting:
+            p = drift_tree(params, drift_key, DriftState(schedule, t))
+        return model.decode_step(p, cache, tokens, cfg)
+    return jax.jit(prefill, donate_argnums=(1,))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -103,14 +163,51 @@ class Request:
 class ServingEngine:
     """Fixed-B slot engine. Prompts are prefilled one slot at a time (the
     cache API is batched, so we prefill with a masked batch); decode steps
-    advance all live slots together."""
+    advance all live slots together.
+
+    With ``drift_key``/``drift_schedule`` the engine serves a drifting
+    chip: each decode step evaluates the packed planes under the drift
+    field at the current request count ``t`` (one tick per model
+    invocation). With ``health`` (a ``serve.health.DriftMonitor``) the
+    engine observes its logit statistics every step; past the monitor's
+    hard threshold it degrades to ``fallback_backend`` — the digital
+    ``ref`` oracle on the *pristine* planes (digit storage does not
+    drift; only the analog evaluation does) — until ``recalibrate()``
+    lands a fresh ``ScaleDelta``, after which the corrected analog path
+    serves again. ``auto_recalibrate=True`` closes the loop without an
+    operator."""
 
     def __init__(self, model: ModelFns, cfg: ModelConfig, params,
                  batch_size: int = 8, max_len: int = 1024,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, *,
+                 drift_key: Optional[jax.Array] = None,
+                 drift_schedule: Optional[DriftSchedule] = None,
+                 health=None,
+                 fallback_backend: str = "ref",
+                 auto_recalibrate: bool = False,
+                 layout_version: Optional[int] = None):
+        from repro.nn.module import current_mesh
         self.model, self.cfg, self.params = model, cfg, params
         self.B, self.max_len = batch_size, max_len
+        self.mesh = current_mesh()          # pinned: see _check_mesh
         self.cache = model.init_cache(cfg, batch_size, max_len)
+        self.temperature = temperature
+        self.drift_key = drift_key
+        self.drift_schedule = drift_schedule
+        self.monitor = health
+        self.fallback_backend = fallback_backend
+        self.auto_recalibrate = auto_recalibrate
+        self.layout_version = layout_version
+        self.fallback_active = False
+        self.t = 0                          # request-count drift clock
+        self._pristine = params             # pre-recalibration reference
+        self._fallback_step = None          # built lazily on first fallback
+        with_stats = health is not None
+        self._step_fn = _make_engine_step(model, cfg, temperature,
+                                          drift_key, drift_schedule,
+                                          with_stats)
+        self._prefill_fn = _make_engine_prefill(model, cfg, drift_key,
+                                                drift_schedule)
         self.decode = make_decode_step(model, cfg, temperature)
         self.key = jax.random.PRNGKey(seed)
         self.slots: List[Optional[Request]] = [None] * batch_size
@@ -125,6 +222,101 @@ class ServingEngine:
                                   max_new_tokens, eos_id))
         return rid
 
+    # -- self-healing internals ----------------------------------------------
+
+    def _check_mesh(self, where: str) -> None:
+        """Fail loudly when generation runs under a different session
+        mesh than the engine was built with — the jitted forwards traced
+        against the build-time mesh, and silently inheriting another
+        serves wrong shardings (the old ``mesh=None`` footgun)."""
+        from repro.nn.module import current_mesh
+        cur = current_mesh()
+        if cur is self.mesh or cur == self.mesh:
+            return
+        raise RuntimeError(
+            f"ServingEngine.{where}: the session mesh changed since this "
+            f"engine was built (built under {self.mesh!r}, now {cur!r}). "
+            "Rebuild the engine under the new mesh, or scope build and "
+            "generation together in repro.nn.module.session_mesh(...).")
+
+    def _invoke_step(self, tokens: jnp.ndarray, sub: jax.Array):
+        """One model invocation: drift clock tick, fallback dispatch,
+        health observation, optional auto-recalibration."""
+        t = jnp.int32(self.t)
+        self.t += 1
+        if self.fallback_active:
+            nxt, self.cache = self._fallback()(self.params_clean(),
+                                               self.cache, tokens, sub)
+            return nxt
+        nxt, self.cache, stats = self._step_fn(self.params, self.cache,
+                                               tokens, sub, t)
+        if self.monitor is not None and stats:
+            self.monitor.observe({k: float(v) for k, v in stats.items()})
+            if self.monitor.hard_drifted and not self.fallback_active:
+                self.monitor.hard_events += 1
+                if self.auto_recalibrate:
+                    self.recalibrate()
+                elif self.fallback_backend:
+                    self.fallback_active = True
+        return nxt
+
+    def params_clean(self):
+        """The pristine packed tree (digit storage does not drift)."""
+        return self._pristine
+
+    def _fallback(self):
+        if self._fallback_step is None:
+            fcfg = dataclasses.replace(
+                self.cfg, cim=self.cfg.cim.replace(mode=self.fallback_backend))
+            self._fallback_step = make_decode_step(self.model, fcfg,
+                                                   self.temperature)
+        return self._fallback_step
+
+    def recalibrate(self, *, probes: int = 64,
+                    key: Optional[jax.Array] = None):
+        """Re-fit per-column scales against the drift accumulated at the
+        current request count and swap the corrected params in: fit a
+        ``ScaleDelta`` from pristine planes to the drift realization at
+        ``t`` (``eval/recalibrate.py``), apply it to the *pristine* tree
+        (deltas are absolute), leave fallback, and re-arm the monitor.
+        Returns the fitted delta (persist it with ``delta.save``)."""
+        from repro.eval.recalibrate import (apply_scale_delta_params,
+                                            fit_scale_delta)
+        if key is None:
+            self.key, key = jax.random.split(self.key)
+        meta = {"t": int(self.t), "probes": probes}
+        if (self.drift_key is not None and self.drift_schedule is not None
+                and not self.drift_schedule.is_static_zero):
+            observed = drift_tree(self._pristine, self.drift_key,
+                                  DriftState(self.drift_schedule,
+                                             jnp.int32(self.t)))
+        else:
+            observed = self._pristine   # no drift model: identity delta
+        delta = fit_scale_delta(self._pristine, observed, key=key,
+                                probes=probes, meta=meta)
+        if self.layout_version is not None:
+            delta = dataclasses.replace(delta,
+                                        layout_version=self.layout_version)
+        self.params = apply_scale_delta_params(self._pristine, delta)
+        self.fallback_active = False
+        if self.monitor is not None:
+            self.monitor.note_recalibration()
+        return delta
+
+    def health(self) -> Dict:
+        """Snapshot of the self-healing state: monitor counters (when a
+        monitor is armed) plus the engine's own drift/fallback status."""
+        snap = self.monitor.snapshot() if self.monitor is not None else {}
+        snap.update({
+            "t": self.t,
+            "fallback_active": self.fallback_active,
+            "drifting": (self.drift_key is not None
+                         and self.drift_schedule is not None
+                         and not self.drift_schedule.is_static_zero),
+            "mesh": None if self.mesh is None else repr(self.mesh),
+        })
+        return snap
+
     # -- internals -----------------------------------------------------------
     def _admit(self):
         """Fill empty slots: prefill the prompt token-by-token batched with
@@ -138,8 +330,7 @@ class ServingEngine:
                     tok = np.array(self.last_tok)
                     tok[i, 0] = t
                     self.key, sub = jax.random.split(self.key)
-                    nxt, self.cache = self.decode(self.params, self.cache,
-                                                  jnp.asarray(tok), sub)
+                    nxt = self._invoke_step(jnp.asarray(tok), sub)
                     nxt = np.asarray(nxt)
                     # only slot i's cache row advanced meaningfully; other
                     # slots consumed a dummy token -> rewind their outputs
@@ -150,13 +341,12 @@ class ServingEngine:
 
     def step(self) -> List[Dict]:
         """One decode step for all active slots; returns finished requests."""
+        self._check_mesh("step")
         self._admit()
         if all(s is None for s in self.slots):
             return []
         self.key, sub = jax.random.split(self.key)
-        nxt, self.cache = self.decode(self.params, self.cache,
-                                      jnp.asarray(self.last_tok), sub)
-        nxt = np.asarray(nxt)
+        nxt = np.asarray(self._invoke_step(jnp.asarray(self.last_tok), sub))
         finished = []
         for i, req in enumerate(self.slots):
             if req is None:
@@ -174,15 +364,33 @@ class ServingEngine:
     def generate_batch(self, prompts: np.ndarray, max_new_tokens: int
                        ) -> np.ndarray:
         """Lockstep batched generation: prompts (B, Tp) -> (B, Tnew)."""
+        self._check_mesh("generate_batch")
         assert prompts.shape[0] == self.B
         cache = self.model.init_cache(self.cfg, self.B, self.max_len)
-        prefill = make_prefill(self.model, self.cfg)
-        logits, cache = prefill(self.params, cache, jnp.asarray(prompts))
+        logits, cache = self._prefill_fn(self.params, cache,
+                                         jnp.asarray(prompts),
+                                         jnp.int32(self.t))
+        self.t += 1
         tok = jnp.argmax(logits[:, -1:, :].astype(jnp.float32), axis=-1
                          ).astype(jnp.int32)
         outs = [np.asarray(tok)]
         for _ in range(max_new_tokens - 1):
             self.key, sub = jax.random.split(self.key)
-            tok, cache = self.decode(self.params, cache, tok, sub)
+            t = jnp.int32(self.t)
+            self.t += 1
+            if self.fallback_active:
+                tok, cache = self._fallback()(self.params_clean(), cache,
+                                              tok, sub)
+                outs.append(np.asarray(tok))
+                continue
+            tok, cache, stats = self._step_fn(self.params, cache, tok, sub, t)
             outs.append(np.asarray(tok))
+            if self.monitor is not None and stats:
+                self.monitor.observe({k: float(v) for k, v in stats.items()})
+                if self.monitor.hard_drifted and not self.fallback_active:
+                    self.monitor.hard_events += 1
+                    if self.auto_recalibrate:
+                        self.recalibrate()
+                    elif self.fallback_backend:
+                        self.fallback_active = True
         return np.concatenate(outs, axis=1)

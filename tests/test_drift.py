@@ -1,0 +1,383 @@
+"""Self-healing serving: drift model, online detection, recalibration
+(DESIGN.md §11).
+
+Covers the PR 6 loop end to end: the time-indexed drift process agrees
+across emulate/deploy under a shared key (same 1e-4 contract as static
+variation), persistent components persist across the request clock while
+the read component re-draws, ScaleDelta fit/apply/persist round-trips
+bit-exactly and rejects version mismatches with typed errors, and the
+serving engine detects drift, degrades, and recalibrates in place.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ARTIFACT_LAYOUT_VERSION, SCALE_DELTA_VERSION,
+                       ArtifactVersionError, CIMConfig, DeployArtifact,
+                       calibrate_linear, init_linear, linear, pack_linear)
+from repro.core.variation import (DriftSchedule, DriftState, drift_field,
+                                  drift_tree, perturb_packed)
+from repro.eval.recalibrate import (ScaleDelta, apply_scale_delta,
+                                    apply_scale_delta_params,
+                                    fit_scale_delta)
+from repro.serve.health import DriftMonitor, HealthConfig
+
+
+def _cfg(**kw):
+    base = dict(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=4, array_rows=32, array_cols=32)
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def _setup(cfg, k=70, n=24, b=8, seed=0):
+    p = init_linear(jax.random.PRNGKey(seed), k, n, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, k)) * 0.5
+    return calibrate_linear(x, p, cfg), x
+
+
+def _sched(**kw):
+    base = dict(read_sigma=0.02, read_rate=0.0, cell_rate=2e-4,
+                col_rate=1e-3)
+    base.update(kw)
+    return DriftSchedule(**base)
+
+
+# ---------------------------------------------------------------------------
+# drift field semantics
+# ---------------------------------------------------------------------------
+
+def test_drift_field_deterministic_and_time_indexed():
+    key = jax.random.PRNGKey(3)
+    shape = (2, 2, 32, 16)
+    st = _sched().at(100)
+    f1 = drift_field(key, shape, st)
+    f2 = drift_field(key, shape, st)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    # the read component re-draws per t -> different field at another t
+    f3 = drift_field(key, shape, _sched().at(101))
+    assert np.abs(np.asarray(f3) - np.asarray(f1)).max() > 0
+
+
+def test_drift_persistent_components_persist_across_t():
+    """With the read component off, the cell/column fields at t2 are a
+    deterministic rescaling of the fields at t1 (same theta draws):
+    log f(t) = t * (rate * theta), so log f(t2)/log f(t1) == t2/t1."""
+    key = jax.random.PRNGKey(5)
+    shape = (2, 2, 32, 16)
+    sched = DriftSchedule(cell_rate=1e-3, col_rate=2e-3)
+    l1 = np.log(np.asarray(drift_field(key, shape, sched.at(100))))
+    l2 = np.log(np.asarray(drift_field(key, shape, sched.at(200))))
+    np.testing.assert_allclose(l2, 2.0 * l1, rtol=1e-4, atol=1e-6)
+
+
+def test_drift_zero_schedule_is_noop():
+    cfg = _cfg()
+    p, x = _setup(cfg)
+    packed = pack_linear(p, cfg)
+    tree = {"lin": packed}
+    out = drift_tree(tree, jax.random.PRNGKey(0), DriftSchedule().at(500))
+    # statically-zero schedule: identical objects, not merely equal values
+    assert out["lin"]["w_digits"] is packed["w_digits"]
+
+
+def test_drift_tree_deterministic_and_column_structure():
+    cfg = _cfg()
+    p, x = _setup(cfg)
+    packed = pack_linear(p, cfg)
+    tree = {"lin": packed}
+    st = DriftSchedule(col_rate=1e-3).at(300)
+    d1 = drift_tree(tree, jax.random.PRNGKey(9), st)
+    d2 = drift_tree(tree, jax.random.PRNGKey(9), st)
+    np.testing.assert_array_equal(np.asarray(d1["lin"]["w_digits"]),
+                                  np.asarray(d2["lin"]["w_digits"]))
+    # pure column drift: the field is constant down each physical column
+    w0 = np.asarray(packed["w_digits"], np.float32)
+    wd = np.asarray(d1["lin"]["w_digits"], np.float32)
+    ratio = np.where(w0 != 0, wd / np.where(w0 == 0, 1, w0), np.nan)
+    # per (split, tile, column): all non-NaN row ratios agree (all-zero
+    # columns carry no signal and are skipped)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        col_spread = np.nanmax(ratio, axis=-2) - np.nanmin(ratio, axis=-2)
+        assert np.nanmax(col_spread) < 1e-5
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_drift_emulate_deploy_agree(use_kernel):
+    """Same key + same DriftState => emulate and deploy see the same chip
+    (the §8 variation contract, now time-indexed)."""
+    cfg = _cfg()
+    p, x = _setup(cfg)
+    vk = jax.random.PRNGKey(42)
+    st = _sched().at(250)
+    y_em = linear(x, p, cfg, variation_key=vk, variation_std=st,
+                  compute_dtype=jnp.float32)
+    pd = pack_linear(p, cfg)
+    y_dep = linear(x, pd, cfg.replace(mode="deploy", use_kernel=use_kernel),
+                   variation_key=vk, variation_std=st,
+                   compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_dep), np.asarray(y_em),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# online detection
+# ---------------------------------------------------------------------------
+
+def test_monitor_detects_shift_and_resets_on_recal():
+    rng = np.random.RandomState(0)
+    mon = DriftMonitor(HealthConfig(warmup=16, soft_threshold=4.0,
+                                    hard_threshold=8.0))
+    for _ in range(16):
+        mon.observe({"m": 1.0 + 0.05 * rng.randn()})
+    assert mon.warmed_up and not mon.drifted
+    for _ in range(20):
+        mon.observe({"m": 2.0 + 0.05 * rng.randn()})
+    assert mon.drifted and mon.drifted_at is not None
+    assert mon.hard_drifted
+    mon.note_recalibration()
+    assert mon.recalibrations == 1 and mon.score == 0.0 and not mon.drifted
+    snap = mon.snapshot()
+    assert snap["steps"] == 36 and "m" in snap["stats"]
+
+
+def test_monitor_ignores_nonfinite_and_scales_floor():
+    mon = DriftMonitor(HealthConfig(warmup=4))
+    for v in (1.0, 1.0, 1.0, 1.0):
+        mon.observe({"m": v})
+    s = mon.observe({"m": float("nan")})
+    assert np.isfinite(s)                 # nan observation doesn't poison
+    # constant baseline: std floor keeps z finite
+    s = mon.observe({"m": 1.5})
+    assert np.isfinite(s) and s > 0
+
+
+# ---------------------------------------------------------------------------
+# recalibration math
+# ---------------------------------------------------------------------------
+
+def test_recalibration_recovers_column_drift():
+    """Pure column-gain drift is recovered to the psum re-rounding floor:
+    the recalibrated deploy output is much closer to clean than the
+    drifted one (exact recovery is impossible — the ADC re-rounds)."""
+    cfg = _cfg(psum_bits=6)
+    p, x = _setup(cfg)
+    packed = pack_linear(p, cfg)
+    dcfg = cfg.replace(mode="deploy")
+    tree = {"lin": packed}
+    st = DriftSchedule(col_rate=1e-3).at(400)   # sigma_col = 0.4
+    drifted = drift_tree(tree, jax.random.PRNGKey(11), st)
+
+    y_clean = linear(x, packed, dcfg, compute_dtype=jnp.float32)
+    y_drift = linear(x, drifted["lin"], dcfg, compute_dtype=jnp.float32)
+    delta = fit_scale_delta(tree, drifted, key=jax.random.PRNGKey(1),
+                            probes=32)
+    recal = apply_scale_delta_params(drifted, delta)
+    assert "deq_scale" in recal["lin"]
+    y_recal = linear(x, recal["lin"], dcfg, compute_dtype=jnp.float32)
+
+    e_drift = float(jnp.linalg.norm(y_drift - y_clean))
+    e_recal = float(jnp.linalg.norm(y_recal - y_clean))
+    assert e_recal < 0.34 * e_drift, (e_drift, e_recal)
+
+
+def test_scale_delta_roundtrip_bit_exact(tmp_path):
+    cfg = _cfg()
+    p, x = _setup(cfg)
+    packed = pack_linear(p, cfg)
+    tree = {"lin": packed}
+    drifted = drift_tree(tree, jax.random.PRNGKey(2), _sched().at(200))
+    delta = fit_scale_delta(tree, drifted, key=jax.random.PRNGKey(3),
+                            meta={"t": 200})
+    path = os.path.join(tmp_path, "delta")
+    delta.save(path)
+    loaded = ScaleDelta.load(path)
+    assert loaded.delta_version == SCALE_DELTA_VERSION
+    assert loaded.layout_version == delta.layout_version
+    assert loaded.meta["t"] == 200
+    a = apply_scale_delta_params(tree, delta)
+    b = apply_scale_delta_params(tree, loaded)
+    np.testing.assert_array_equal(np.asarray(a["lin"]["s_p"]),
+                                  np.asarray(b["lin"]["s_p"]))
+    np.testing.assert_array_equal(np.asarray(a["lin"]["deq_scale"]),
+                                  np.asarray(b["lin"]["deq_scale"]))
+
+
+# ---------------------------------------------------------------------------
+# versioning: typed errors, stale deltas
+# ---------------------------------------------------------------------------
+
+def _artifact(tmp_path):
+    cfg = _cfg()
+    p, _ = _setup(cfg)
+    packed = pack_linear(p, cfg)
+    art = DeployArtifact(kind="linear", params=packed,
+                         config=cfg.replace(mode="deploy"))
+    d = os.path.join(tmp_path, "art")
+    art.save(d)
+    return art, d
+
+
+def test_load_rejects_future_layout_with_typed_error(tmp_path):
+    _, d = _artifact(tmp_path)
+    jpath = os.path.join(d, "artifact.json")
+    with open(jpath) as f:
+        head = json.load(f)
+    head["layout_version"] = ARTIFACT_LAYOUT_VERSION + 7
+    with open(jpath, "w") as f:
+        json.dump(head, f)
+    with pytest.raises(ArtifactVersionError) as ei:
+        DeployArtifact.load(d)
+    msg = str(ei.value)
+    assert "layout_version" in msg
+    assert str(ARTIFACT_LAYOUT_VERSION + 7) in msg
+    assert str(ARTIFACT_LAYOUT_VERSION) in msg
+    assert "PR 6" in msg                        # names the writer PR
+    # typed: still catchable as ValueError (pre-PR-6 callers)
+    assert isinstance(ei.value, ValueError)
+
+
+def test_future_delta_version_rejected(tmp_path):
+    cfg = _cfg()
+    p, _ = _setup(cfg)
+    tree = {"lin": pack_linear(p, cfg)}
+    drifted = drift_tree(tree, jax.random.PRNGKey(2), _sched().at(50))
+    delta = fit_scale_delta(tree, drifted, key=jax.random.PRNGKey(3))
+    newer = dataclasses.replace(delta,
+                                delta_version=SCALE_DELTA_VERSION + 1)
+    path = os.path.join(tmp_path, "delta")
+    newer.save(path)
+    with pytest.raises(ArtifactVersionError, match="delta_version"):
+        ScaleDelta.load(path)
+
+
+def test_stale_delta_rejected_on_apply(tmp_path):
+    art, _ = _artifact(tmp_path)
+    tree = art.params
+    drifted = drift_tree({"p": tree}, jax.random.PRNGKey(2),
+                         _sched().at(50))["p"]
+    delta = fit_scale_delta(tree, drifted, key=jax.random.PRNGKey(3))
+    stale = dataclasses.replace(delta,
+                                layout_version=art.layout_version + 1)
+    with pytest.raises(ArtifactVersionError, match="layout_version"):
+        apply_scale_delta(art, stale)
+    # fresh delta applies; re-applying on the recalibrated artifact is
+    # refused (deltas are absolute)
+    recal = apply_scale_delta(art, delta)
+    assert recal.meta["delta_version"] == delta.delta_version
+    with pytest.raises(ValueError, match="absolute"):
+        apply_scale_delta(recal, delta)
+
+
+# ---------------------------------------------------------------------------
+# engine integration (tiny LM)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.api import model_artifact
+    from repro.configs.registry import get_config
+    from repro.core.granularity import Granularity as G
+    from repro.models.registry import get_model
+    from repro.nn import init_params
+    cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=32, array_cols=32,
+                    weight_granularity=G.COLUMN, psum_granularity=G.COLUMN)
+    cfg = get_config("qwen3-0.6b", reduced=True, cim=cim)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
+    art = model_artifact(params, cim)
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab, (2, 5)
+                                               ).astype(np.int32)
+    return art, cfg, prompts
+
+
+def test_engine_zero_schedule_matches_plain(lm_setup):
+    from repro.serve import engine_from_artifact
+    art, cfg, prompts = lm_setup
+    eng0 = engine_from_artifact(art, cfg, batch_size=2, max_len=32)
+    eng1 = engine_from_artifact(art, cfg, batch_size=2, max_len=32,
+                                drift_key=jax.random.PRNGKey(7),
+                                drift_schedule=DriftSchedule())
+    out0 = eng0.generate_batch(prompts, 6)
+    out1 = eng1.generate_batch(prompts, 6)
+    np.testing.assert_array_equal(out0, out1)
+
+
+def test_engine_drift_determinism(lm_setup):
+    """Same drift key + same request schedule => bit-identical tokens."""
+    from repro.serve import engine_from_artifact
+    art, cfg, prompts = lm_setup
+    sched = _sched()
+
+    def run():
+        eng = engine_from_artifact(art, cfg, batch_size=2, max_len=32,
+                                   drift_key=jax.random.PRNGKey(7),
+                                   drift_schedule=sched)
+        eng.t = 300
+        return eng.generate_batch(prompts, 6)
+    np.testing.assert_array_equal(run(), run())
+
+
+def test_engine_health_and_recalibrate(lm_setup):
+    from repro.serve import engine_from_artifact
+    art, cfg, prompts = lm_setup
+    mon = DriftMonitor(HealthConfig(warmup=4))
+    eng = engine_from_artifact(art, cfg, batch_size=2, max_len=32,
+                               drift_key=jax.random.PRNGKey(7),
+                               drift_schedule=_sched(), health=mon)
+    eng.generate_batch(prompts, 6)
+    h = eng.health()
+    # prefill tick + 5 decode ticks for 6 generated tokens
+    assert h["drifting"] and h["t"] == 6 and h["steps"] > 0
+    delta = eng.recalibrate(probes=8)
+    assert set(delta.gains)                       # one gain per CIM node
+    assert eng.health()["recalibrations"] == 1
+    assert "deq_scale" in str(jax.tree_util.tree_structure(eng.params))
+    # engine still serves after the swap
+    out = eng.generate_batch(prompts, 4)
+    assert out.shape == (2, 4)
+
+
+def test_engine_hard_drift_falls_back(lm_setup):
+    from repro.serve import engine_from_artifact
+    art, cfg, prompts = lm_setup
+    mon = DriftMonitor(HealthConfig(warmup=2, soft_threshold=0.0,
+                                    hard_threshold=0.0))
+    eng = engine_from_artifact(art, cfg, batch_size=2, max_len=32,
+                               drift_key=jax.random.PRNGKey(7),
+                               drift_schedule=_sched(), health=mon)
+    eng.generate_batch(prompts, 6)
+    assert eng.fallback_active                    # zero threshold trips
+    assert eng.health()["hard_events"] >= 1
+    # fallback serves the digital reference on pristine planes
+    out = eng.generate_batch(prompts, 4)
+    assert out.shape == (2, 4)
+    eng.recalibrate(probes=8)
+    assert not eng.fallback_active
+
+
+def test_engine_mesh_mismatch_fails_loudly(lm_setup):
+    from repro.nn.module import current_rules, set_activation_rules
+    from repro.serve import engine_from_artifact
+    art, cfg, prompts = lm_setup
+    eng = engine_from_artifact(art, cfg, batch_size=2, max_len=32)
+    mesh = jax.make_mesh((1,), ("model",))
+    set_activation_rules(current_rules(), mesh)
+    try:
+        with pytest.raises(RuntimeError, match="session mesh"):
+            eng.generate_batch(prompts, 2)
+        with pytest.raises(RuntimeError, match="session mesh"):
+            eng.submit([1, 2], 2), eng.step()
+    finally:
+        set_activation_rules(None, None)
+    # back under the build mesh: serves again
+    out = eng.generate_batch(prompts, 2)
+    assert out.shape == (2, 2)

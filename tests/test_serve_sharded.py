@@ -208,3 +208,109 @@ def test_engine_sharded_generation_matches(mesh4):
     finally:
         set_activation_rules(None, None)
     np.testing.assert_array_equal(out1, out4)
+
+
+# -- self-healing serving (DESIGN.md §11) -----------------------------------
+
+def test_drift_logits_bit_exact_sharded(mesh4):
+    """Same drift key + same request clock => the 4-device deploy path
+    sees the SAME chip realization as the 1-device path, bit-exactly —
+    the drift field is drawn on the full packed planes pre-shard, like
+    static variation."""
+    from repro.core.variation import DriftSchedule, DriftState
+    art, cfg, model = _lm_artifact()
+    serve_cfg = dataclasses.replace(cfg, cim=art.config)
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (2, 8)), jnp.int32)
+    from repro.core.variation import drift_tree
+    sched = DriftSchedule(read_sigma=0.02, cell_rate=2e-4, col_rate=1e-3)
+    state = DriftState(sched, jnp.int32(200))
+    key = jax.random.PRNGKey(7)
+    p1 = drift_tree(art.params, key, state)
+    logits1 = model.forward(p1, toks, serve_cfg)
+    sharded = art.shard(mesh4)
+    set_activation_rules({}, mesh4)
+    try:
+        p4 = drift_tree(sharded.params, key, state)
+        logits4 = model.forward(p4, toks, serve_cfg)
+    finally:
+        set_activation_rules(None, None)
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits4))
+
+
+def test_engine_drift_generation_bit_exact_sharded(mesh4):
+    from repro.core.variation import DriftSchedule
+    from repro.serve.engine import engine_from_artifact
+    art, cfg, _ = _lm_artifact()
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab, (2, 8)
+                                               ).astype(np.int32)
+    sched = DriftSchedule(read_sigma=0.02, cell_rate=2e-4, col_rate=1e-3)
+    kw = dict(batch_size=2, max_len=64, drift_key=jax.random.PRNGKey(7),
+              drift_schedule=sched)
+    eng1 = engine_from_artifact(art, cfg, **kw)
+    eng1.t = 150
+    out1 = eng1.generate_batch(prompts, 6)
+    try:
+        eng4 = engine_from_artifact(art, cfg, mesh=mesh4, **kw)
+        eng4.t = 150
+        out4 = eng4.generate_batch(prompts, 6)
+    finally:
+        set_activation_rules(None, None)
+    np.testing.assert_array_equal(out1, out4)
+
+
+def test_scale_delta_apply_sharded_bit_exact(mesh4):
+    """Applying a ScaleDelta to a column-sharded artifact is bit-exact
+    with applying it to the unsharded one — each device updates only its
+    own column slice (acceptance criterion)."""
+    from repro.core.variation import DriftSchedule, drift_tree
+    from repro.eval.recalibrate import apply_scale_delta, fit_scale_delta
+    art, cfg, model = _lm_artifact()
+    sched = DriftSchedule(cell_rate=2e-4, col_rate=1e-3)
+    drifted = drift_tree(art.params, jax.random.PRNGKey(7), sched.at(300))
+    delta = fit_scale_delta(art, drifted, key=jax.random.PRNGKey(3),
+                            probes=16)
+    recal1 = apply_scale_delta(art, delta)
+    sharded = art.shard(mesh4)
+    recal4 = apply_scale_delta(sharded, delta)
+    assert recal4.meta["delta_version"] == delta.delta_version
+
+    def leaves_by_path(tree):
+        out = {}
+
+        def walk(node, path):
+            if isinstance(node, dict):
+                if "w_digits" in node:
+                    out["/".join(path)] = node
+                    return
+                for k, v in node.items():
+                    walk(v, path + (k,))
+            elif isinstance(node, (list, tuple)):
+                for i, v in enumerate(node):
+                    walk(v, path + (str(i),))
+        walk(tree, ())
+        return out
+
+    n1, n4 = leaves_by_path(recal1.params), leaves_by_path(recal4.params)
+    assert set(n1) == set(n4) and n1
+    for name in n1:
+        for leaf in ("s_p", "deq_scale"):
+            a = np.asarray(n1[name][leaf])
+            b = np.asarray(n4[name][leaf])
+            np.testing.assert_array_equal(a, b, err_msg=f"{name}/{leaf}")
+        # sharded apply keeps the gain column-sharded on divisible nodes
+        if n4[name]["w_digits"].shape[-1] % 4 == 0:
+            spec = n4[name]["deq_scale"].sharding.spec
+            assert len(spec) == 0 or spec[-1] in ("model", None)
+
+    # end-to-end: recalibrated logits agree bit-exactly too
+    toks = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab, (2, 6)), jnp.int32)
+    serve_cfg = dataclasses.replace(cfg, cim=art.config)
+    logits1 = model.forward(recal1.params, toks, serve_cfg)
+    set_activation_rules({}, mesh4)
+    try:
+        logits4 = model.forward(recal4.params, toks, serve_cfg)
+    finally:
+        set_activation_rules(None, None)
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits4))
