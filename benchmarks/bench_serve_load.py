@@ -1,0 +1,144 @@
+"""Serving load generator: request latency p50/p99 and tokens/sec under
+concurrent streams (DESIGN.md §12).
+
+Packs a reduced LM once, then drives the continuous-batching engine
+(``submit``/``step`` — the slot path, not lockstep ``generate_batch``)
+with closed bursts of ``concurrency`` requests against ``batch`` slots.
+Every number comes out of the engine's own telemetry plane
+(``repro.obs``): request latency and queue-wait percentiles from the
+registry histograms (exact, numpy-convention interpolation), throughput
+from the decode-step span histogram, and the ADC saturation summary from
+the armed collector (``every_n``-decimated folding — the same sampled
+mode a production deployment would run).
+
+All prompts in a burst share one length, so the engine's
+single-slot-prefill synchronization caveat (serve/engine.py ``_admit``)
+does not bias the latency distribution: admission happens in waves and
+each wave's prefill cost is identical.
+
+This is the repo's headline serving-performance artifact
+(``bench_serve_load.json``; schema in benchmarks/README.md). On a CPU
+host the absolute tokens/sec is an emulation number — the shape that
+matters is the latency/throughput trade as concurrency outruns the slot
+count (queue wait comes to dominate p99 while tokens/sec saturates).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve_load
+
+Output: ``serve_load,...`` CSV lines + ``bench_serve_load.json`` (only
+from the module entry point — wall-clock numbers must not churn the
+checked-in sample on every smoke run).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def _burst(eng, reg, *, concurrency, prompt_len, new_tokens, vocab, seed,
+           timeline_every=4):
+    """Submit ``concurrency`` requests at once and step until drained.
+    Returns (wall_seconds, completed, queue-depth timeline)."""
+    rng = np.random.RandomState(seed)
+    t0 = time.time()
+    for _ in range(concurrency):
+        eng.submit(rng.randint(0, vocab, size=(prompt_len,)), new_tokens)
+    timeline = []
+    done, steps = 0, 0
+    budget = concurrency * (prompt_len + new_tokens) * 4  # stall guard
+    while done < concurrency and steps < budget:
+        done += len(eng.step())
+        steps += 1
+        if steps % timeline_every == 1 or done == concurrency:
+            timeline.append({
+                "step": steps,
+                "queue_depth": len(eng.queue),
+                "active_slots": sum(s is not None for s in eng.slots)})
+    assert done == concurrency, f"burst stalled: {done}/{concurrency}"
+    return time.time() - t0, done, timeline
+
+
+def run(csv=None, *, concurrency=(8, 32, 128), batch=8, prompt_len=4,
+        new_tokens=8, every_n=4, out_json=None):
+    from repro.api import CIMConfig, model_artifact
+    from repro.configs.registry import get_config
+    from repro.models.registry import get_model
+    from repro.nn import init_params
+    from repro.obs import MetricsRegistry, adc, names
+    from repro.serve.engine import engine_from_artifact
+
+    cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=128, array_cols=128,
+                    use_kernel=False)
+    cfg = get_config("qwen3-0.6b", reduced=True, cim=cim)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
+    artifact = model_artifact(params, cim, meta={"arch": "qwen3-0.6b"})
+
+    points = []
+    for ci, c in enumerate(concurrency):
+        reg = MetricsRegistry()
+        with adc.sampled(reg, every_n=every_n):
+            eng = engine_from_artifact(artifact, cfg, batch_size=batch,
+                                       max_len=256, metrics=reg)
+            # warm the jit caches (prefill + decode traces), then zero the
+            # telemetry so the point measures steady-state serving only
+            _burst(eng, reg, concurrency=1, prompt_len=prompt_len,
+                   new_tokens=new_tokens, vocab=cfg.vocab, seed=99)
+            reg.reset()
+            adc.reset()
+            eng.retired = 0
+            wall, done, timeline = _burst(
+                eng, reg, concurrency=c, prompt_len=prompt_len,
+                new_tokens=new_tokens, vocab=cfg.vocab, seed=ci)
+            adc.sync()
+            sat = adc.summary()
+            m = eng.metrics()
+        lat = reg.histogram(names.REQUEST_LATENCY_SECONDS)
+        qw = reg.histogram(names.QUEUE_WAIT_SECONDS)
+        tps = done * new_tokens / wall
+        n_dev = m["throughput"]["devices"]
+        point = {
+            "concurrency": c,
+            "completed": done,
+            "p50_latency_s": round(lat.percentile(50), 4),
+            "p99_latency_s": round(lat.percentile(99), 4),
+            "p50_queue_wait_s": round(qw.percentile(50), 4),
+            "p99_queue_wait_s": round(qw.percentile(99), 4),
+            "tokens_per_sec": round(tps, 2),
+            "tokens_per_sec_per_device": round(tps / n_dev, 2),
+            "wall_s": round(wall, 2),
+            "queue_depth_timeline": timeline,
+            "saturation": {
+                "conversions": sat["conversions"],
+                "saturated": sat["saturated"],
+                "clip_rate": round(sat["clip_rate"], 6),
+                "worst_col_rate": round(sat["worst_col_rate"], 6),
+                "every_n": sat["every_n"],
+            },
+        }
+        points.append(point)
+        line = (f"serve_load,{c},{point['p50_latency_s']},"
+                f"{point['p99_latency_s']},{point['tokens_per_sec']},"
+                f"{point['saturation']['clip_rate']}")
+        print(line)
+        if csv is not None:
+            csv.append(line)
+
+    doc = {"schema": "bench_serve_load/v1", "arch": "qwen3-0.6b-reduced",
+           "slots": batch, "prompt_len": prompt_len,
+           "new_tokens": new_tokens, "adc_every_n": every_n,
+           "points": points}
+    if out_json is not None:
+        with open(out_json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"[bench_serve_load] wrote {out_json} "
+              f"({len(points)} concurrency points)")
+    return doc
+
+
+if __name__ == "__main__":
+    run(out_json="bench_serve_load.json")

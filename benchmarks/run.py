@@ -28,7 +28,8 @@ def main(argv=None) -> None:
     from . import (bench_conv_kernel, bench_dequant_overhead,
                    bench_drift_recal, bench_granularity, bench_hw_cost,
                    bench_kernel, bench_lm_cim, bench_psum_range,
-                   bench_qat_stages, bench_serve_sharded, bench_variation)
+                   bench_qat_stages, bench_serve_load, bench_serve_sharded,
+                   bench_variation)
 
     csv = []
     t0 = time.time()
@@ -38,6 +39,10 @@ def main(argv=None) -> None:
     bench_kernel.run(csv=csv)                      # kernel microbench
     bench_conv_kernel.run(csv=csv)                 # fused conv deploy bench
     bench_serve_sharded.run(csv=csv)               # column-parallel serving
+    # load generator at tiny scale — the checked-in JSON artifact comes
+    # from the module entry point, never from this tier
+    bench_serve_load.run(csv=csv, concurrency=(2, 4, 8), batch=2,
+                         prompt_len=2, new_tokens=2)
     if not args.smoke:
         bench_granularity.run(steps=steps, csv=csv)   # Fig. 7 / Table III
         bench_qat_stages.run(steps=steps, csv=csv)    # Fig. 9

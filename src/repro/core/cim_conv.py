@@ -35,6 +35,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import adc as obs_adc
+
 from .bitsplit import place_values, split_digits
 from .cim_linear import CIMConfig, _deprecated, _quantize_act
 from .granularity import Granularity, conv_tiling
@@ -202,6 +204,9 @@ def _forward_conv_emulate(x, params, cfg, stride, padding, variation_key,
         # the grid so ADC tie-breaking matches the deploy kernel bit-exactly
         psum = psum + jax.lax.stop_gradient(jnp.round(psum) - psum)
         s_p = t.broadcast_psum_scale(params["s_p"])          # (S, kt, co)
+        if obs_adc.enabled():
+            # exact counters: emulate materializes every partial sum
+            obs_adc.record(psum, s_p[None, None, None], cfg.psum_bits)
         psum = lsq_fake_quant(psum, s_p[None, None, None], cfg.psum_bits,
                               signed=True)
 

@@ -30,6 +30,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import adc as obs_adc
+
 from .bitsplit import place_values, split_digits
 from .granularity import ArrayTiling, Granularity
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
@@ -291,6 +293,9 @@ def _forward_emulate(x, params, cfg, variation_key, sigma, compute_dtype):
         # the grid so ADC tie-breaking matches the deploy kernel bit-exactly
         psum = psum + jax.lax.stop_gradient(jnp.round(psum) - psum)
         s_p = _full_psum_scale(params, t)                     # (S, kt, N)
+        if obs_adc.enabled():
+            # exact counters: emulate materializes every partial sum
+            obs_adc.record(psum, s_p, cfg.psum_bits)
         psum = lsq_fake_quant(psum, s_p, cfg.psum_bits, signed=True)
 
     # fused dequantization (paper Eq. 3 / Fig. 4d): one scale per column

@@ -23,6 +23,15 @@ gather, mirroring the kernel's own last-block padding. Cell-variation
 noise is always drawn on the FULL unpadded packed planes *before*
 sharding, so a sharded evaluation is bit-exact with the single-device
 evaluation under the same key.
+
+Observability (DESIGN.md §12): when the ``repro.obs.adc`` collector is
+armed, both wrappers emit a per-column ADC saturation side-output — the
+partial sums are recomputed by a jnp einsum next to the kernel call
+(the fused kernel itself never materializes them; that is the point of
+fusion) and reduced to per-column clipped-conversion counts. The main
+output is untouched, bit-exact with the un-instrumented path, and the
+disarmed path contains no side computation at all. Arming is a
+trace-time decision — see ``repro.obs.adc``.
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.variation import perturb_digits, variation_wanted
+from repro.obs import adc as obs_adc
 
 from . import ref
 from .cim_conv import cim_conv_pallas
@@ -65,6 +75,26 @@ def pad_cols(digits, s_p, deq, n_shards: int):
         s_p = jnp.pad(s_p, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
         deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad)))
     return digits, s_p, deq
+
+
+def _record_saturation(a2, digits, s_p, *, psum_bits, variation_key,
+                       variation_std):
+    """ADC saturation side-output for the fused paths (armed only).
+
+    The deploy kernel never materializes partial sums, so the armed
+    trace recomputes them with the reference einsum — including the
+    cell-noise realization, so the counts describe the digits the
+    kernel actually multiplied — and ships per-column clipped counts
+    host-side. Nothing here feeds the main output."""
+    d = digits
+    if d.dtype == jnp.int4:
+        d = d.astype(jnp.int8)
+    if variation_wanted(variation_key, variation_std):
+        d = perturb_digits(d, variation_key, variation_std)
+    psum = jnp.einsum("mtr,strn->mstn", a2.astype(jnp.float32),
+                      d.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    obs_adc.record(psum, s_p, psum_bits)
 
 
 def _cim_matmul_sharded(
@@ -149,6 +179,10 @@ def cim_matmul(
     for d in batch_shape:
         m *= d
     a2 = a_t.reshape((m,) + a_t.shape[-2:])
+    if obs_adc.enabled() and psum_quant:
+        _record_saturation(a2, digits, s_p, psum_bits=psum_bits,
+                           variation_key=variation_key,
+                           variation_std=variation_std)
     if col_shards(mesh, mesh_axis) > 1:
         out = _cim_matmul_sharded(
             a2, digits, s_p, deq, mesh, mesh_axis,
@@ -211,6 +245,15 @@ def cim_conv(
     if not isinstance(padding, str):
         # hashable for the jit static arg
         padding = tuple((int(lo), int(hi)) for lo, hi in padding)
+    if obs_adc.enabled() and psum_quant:
+        k_tiles = digits.shape[1]
+        p_t = ref.extract_conv_patches(a_int, kh, kw, stride, padding,
+                                       k_tiles, c_per_array)
+        b_, ho_, wo_ = p_t.shape[:3]
+        _record_saturation(
+            p_t.reshape(b_ * ho_ * wo_, k_tiles, p_t.shape[-1]),
+            digits, s_p, psum_bits=psum_bits,
+            variation_key=variation_key, variation_std=variation_std)
     if col_shards(mesh, mesh_axis) > 1:
         # same lowering as cim_conv_pallas: patches once (replicated),
         # then the column-parallel matmul grid over the C_out shards

@@ -22,10 +22,17 @@ Self-healing serving (DESIGN.md §11): ``--drift-col-rate`` /
 ``--health`` arms the ``DriftMonitor``, and ``--auto-recal`` closes the
 loop — past the hard threshold the engine re-fits the per-column scales
 in place instead of degrading to the digital fallback.
+
+Telemetry (DESIGN.md §12): ``--metrics-out PATH`` dumps the engine's
+folded ``metrics()`` view (health + throughput + registry snapshot, and
+ADC saturation when ``--adc-sample`` arms the collector) as JSON after
+generation; ``--report-every N`` prints a one-line operator report to
+stderr every N decode steps.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -66,6 +73,16 @@ def main(argv=None):
     ap.add_argument("--auto-recal", action="store_true",
                     help="recalibrate column scales automatically on "
                          "hard drift instead of serving the fallback")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write engine.metrics() (health + throughput + "
+                         "metric snapshot) as JSON after generation")
+    ap.add_argument("--report-every", type=int, default=0, metavar="N",
+                    help="print a one-line metrics report to stderr every "
+                         "N decode steps (0 = off)")
+    ap.add_argument("--adc-sample", type=int, default=0, metavar="N",
+                    help="arm the per-column ADC saturation collector, "
+                         "folding every Nth kernel invocation (0 = off; "
+                         "DESIGN.md §12)")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import get_config
@@ -89,6 +106,13 @@ def main(argv=None):
     if args.health or args.auto_recal:
         drift_kw["health"] = DriftMonitor()
         drift_kw["auto_recalibrate"] = args.auto_recal
+    if args.report_every:
+        drift_kw["report_every"] = args.report_every
+    if args.adc_sample:
+        # arm BEFORE the engine builds: instrumentation is a trace-time
+        # decision (repro.obs.adc)
+        from repro.obs import adc
+        adc.enable(every_n=args.adc_sample)
 
     mesh = None
     if args.mesh > 1:
@@ -149,8 +173,16 @@ def main(argv=None):
     print(f"[serve] arch={args.arch} mesh={devs} generated {out.shape} "
           f"tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s)")
     print(f"[serve] sample continuation: {out[0][:16].tolist()}")
+    h = engine.health()
+    print(f"[serve] admission: submitted={h['submitted']} "
+          f"retired={h['retired']} queue_depth={h['queue_depth']} "
+          f"active_slots={h['active_slots']}/{h['slots']}")
     if args.health or args.auto_recal:
-        print(f"[serve] health: {engine.health()}")
+        print(f"[serve] health: {h}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w", encoding="utf-8") as f:
+            json.dump(engine.metrics(), f, indent=2, default=str)
+        print(f"[serve] metrics -> {args.metrics_out}")
     return 0
 
 

@@ -1,0 +1,24 @@
+"""repro.obs — the telemetry plane (DESIGN.md §12).
+
+Three pieces, all host-side and dependency-free:
+
+* ``metrics``: a ``MetricsRegistry`` of counters/gauges/histograms with
+  JSON snapshot + reset, a JSONL event log, and Prometheus text
+  exposition. Histogram percentiles are exact (numpy-compatible
+  interpolation over raw samples).
+* ``tracing``: ``Tracer``/``SpanRecord`` — nested host-side spans that
+  record durations into the registry and events into its log.
+* ``adc``: the sampled per-column ADC saturation collector the kernel
+  wrappers and emulate forwards feed (``cim.adc.*`` metrics) — the
+  paper-native drift signal, off by default, zero-overhead when
+  disarmed.
+
+Canonical metric names live in ``names`` and nowhere else;
+``tools/check_metrics.py`` holds DESIGN.md §12 to them.
+"""
+from . import adc, names
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .tracing import SpanRecord, Tracer
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "SpanRecord", "Tracer", "adc", "names"]

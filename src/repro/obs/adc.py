@@ -1,0 +1,203 @@
+"""Per-column ADC saturation counters (DESIGN.md §12).
+
+The paper's core claim is that column-wise partial-sum scales keep
+low-bit ADC quantization accurate; the leading *production* indicator
+that a chip (or its calibration) is going bad is therefore the fraction
+of partial sums that clip at the ADC range, per physical column. This
+module collects exactly that signal from the running forwards:
+
+* **emulate** materializes every partial sum anyway (for LSQ
+  gradients), so its counters are exact — every conversion of every
+  step is counted while armed.
+* **deploy/ref** never materialize the partial-sum tensor (that is the
+  point of the fused kernel), so the kernel wrappers
+  (``kernels/ops.cim_matmul`` / ``cim_conv``) add a *side-output* when
+  armed: the psums are recomputed by a jnp einsum next to the kernel
+  call and reduced to per-column counts. The main output is untouched —
+  bit-exact with the un-instrumented path (tests assert) — and when the
+  collector is disarmed the side computation is absent from the trace
+  entirely, so the disabled path costs zero.
+
+Arming is a **trace-time** decision: ``enable()`` before the first
+forward (or engine build); functions jitted while disarmed carry no
+instrumentation until they retrace. Disarming is effective immediately
+even for already-traced functions — the host-side fold checks
+``enabled()`` per callback. ``every_n`` decimates host-side folding
+(callback bookkeeping + histogram growth); the traced side computation
+runs per armed invocation, which is why the collector is off by
+default.
+
+Counts cross the device boundary with ``jax.debug.callback``; callbacks
+are asynchronous, so call ``sync()`` (an effects barrier) before
+reading ``summary()``/``totals()`` at a point where exact totals
+matter.
+"""
+from __future__ import annotations
+
+import functools
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import names
+from .metrics import MetricsRegistry
+
+
+class _AdcState:
+    """Module-level collector state (one serving process, one chip)."""
+
+    def __init__(self):
+        self.enabled = False
+        self.every_n = 1
+        self.registry: Optional[MetricsRegistry] = None
+        self.calls = 0                  # armed kernel invocations seen
+        self.saturated_total = 0        # folded clipped conversions
+        self.conversions_total = 0      # folded conversions
+        self.worst_col_rate = 0.0       # max per-column rate ever folded
+        self.last_col_rates: Optional[np.ndarray] = None
+        self.last_col_occupancy: Optional[np.ndarray] = None
+
+
+_STATE = _AdcState()
+
+
+def enable(registry: Optional[MetricsRegistry] = None,
+           every_n: int = 1) -> MetricsRegistry:
+    """Arm the collector. Must run before the instrumented functions
+    trace (see module docstring). Returns the sink registry."""
+    if every_n < 1:
+        raise ValueError(f"every_n must be >= 1, got {every_n}")
+    _STATE.enabled = True
+    _STATE.every_n = every_n
+    _STATE.registry = registry if registry is not None else MetricsRegistry()
+    return _STATE.registry
+
+
+def disable() -> None:
+    """Disarm. Effective immediately, even for stale traces (the fold
+    callback checks this flag host-side)."""
+    _STATE.enabled = False
+
+
+def enabled() -> bool:
+    return _STATE.enabled
+
+
+def reset() -> None:
+    """Zero the collector's own totals (the sink registry is the
+    caller's; reset it separately if wanted)."""
+    _STATE.calls = 0
+    _STATE.saturated_total = 0
+    _STATE.conversions_total = 0
+    _STATE.worst_col_rate = 0.0
+    _STATE.last_col_rates = None
+    _STATE.last_col_occupancy = None
+
+
+@contextmanager
+def sampled(registry: Optional[MetricsRegistry] = None, every_n: int = 1):
+    """Scoped arming for benches and tests: arm, yield the registry,
+    disarm and reset on exit."""
+    reg = enable(registry, every_n)
+    try:
+        yield reg
+    finally:
+        disable()
+        reset()
+
+
+def sync() -> None:
+    """Wait for in-flight fold callbacks (jax effects barrier)."""
+    jax.effects_barrier()
+
+
+def totals() -> Tuple[int, int]:
+    """(saturated, conversions) folded so far — the engine derives its
+    per-step clip-rate drift statistic from deltas of these."""
+    return _STATE.saturated_total, _STATE.conversions_total
+
+
+def summary() -> Dict[str, object]:
+    """JSON-safe roll-up for ``engine.metrics()`` / the load bench."""
+    sat, conv = _STATE.saturated_total, _STATE.conversions_total
+    return {
+        "enabled": _STATE.enabled,
+        "every_n": _STATE.every_n,
+        "kernel_invocations": _STATE.calls,
+        "samples_folded": _STATE.calls and (
+            (_STATE.calls + _STATE.every_n - 1) // _STATE.every_n),
+        "conversions": conv,
+        "saturated": sat,
+        "clip_rate": (sat / conv) if conv else 0.0,
+        "worst_col_rate": _STATE.worst_col_rate,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the measurement itself
+# ---------------------------------------------------------------------------
+
+def saturation_stats(psum: jnp.ndarray, s_p: jnp.ndarray, psum_bits: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-column (last-axis) ADC statistics of a partial-sum tensor.
+
+    psum (..., N) against scales s_p broadcastable to it. Returns
+    ``(saturated, occupancy)``: clipped-conversion counts (N,) int32 and
+    mean |q|/q_max range occupancy (N,) float32. ``psum_bits == 1`` is
+    the sign ADC — it cannot clip and always occupies full range."""
+    n = psum.shape[-1]
+    if psum_bits < 2:
+        return (jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32))
+    qn = float(-(2 ** (psum_bits - 1)))
+    qp = float(2 ** (psum_bits - 1) - 1)
+    q = jnp.round(jnp.round(psum.astype(jnp.float32))
+                  / jnp.maximum(s_p.astype(jnp.float32), 1e-9))
+    axes = tuple(range(psum.ndim - 1))
+    sat = jnp.sum(((q < qn) | (q > qp)).astype(jnp.int32), axis=axes)
+    occ = jnp.mean(jnp.abs(jnp.clip(q, qn, qp)) / qp, axis=axes)
+    return sat, occ
+
+
+def _fold(sat: np.ndarray, occ: np.ndarray, *, conv_per_col: int) -> None:
+    """Host-side sink for one kernel invocation's per-column counts.
+    Decimation (``every_n``) and the disarm check both live here so a
+    stale armed trace stops reporting the moment ``disable()`` runs."""
+    st = _STATE
+    if not st.enabled or st.registry is None:
+        return
+    st.calls += 1
+    if (st.calls - 1) % st.every_n:
+        return
+    sat = np.asarray(sat, np.int64)
+    occ = np.asarray(occ, np.float64)
+    n = int(sat.shape[0])
+    conv = conv_per_col * n
+    st.saturated_total += int(sat.sum())
+    st.conversions_total += conv
+    rates = sat / float(conv_per_col)
+    st.worst_col_rate = max(st.worst_col_rate, float(rates.max(initial=0.0)))
+    st.last_col_rates = rates
+    st.last_col_occupancy = occ
+    reg = st.registry
+    reg.counter(names.ADC_SAMPLES).inc()
+    reg.counter(names.ADC_CONVERSIONS).inc(conv)
+    reg.counter(names.ADC_SATURATED).inc(int(sat.sum()))
+    h_rate = reg.histogram(names.ADC_COL_SATURATION_RATE)
+    h_occ = reg.histogram(names.ADC_OCCUPANCY)
+    for r, o in zip(rates, occ):
+        h_rate.observe(r)
+        h_occ.observe(o)
+
+
+def record(psum: jnp.ndarray, s_p: jnp.ndarray, psum_bits: int) -> None:
+    """Traced side-output: reduce ``psum`` to per-column counts and ship
+    them host-side. Call ONLY under ``enabled()`` (trace-time check —
+    the caller's ``if adc.enabled():`` is what makes the disabled path
+    free) and only when the config actually quantizes partial sums."""
+    sat, occ = saturation_stats(psum, s_p, psum_bits)
+    conv_per_col = int(np.prod(psum.shape[:-1]))
+    jax.debug.callback(functools.partial(_fold, conv_per_col=conv_per_col),
+                       sat, occ)

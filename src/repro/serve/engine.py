@@ -15,11 +15,25 @@ serves one drift realization of the packed planes at the current request
 count — watches its own logit statistics through a ``DriftMonitor``
 (``health=``), degrades to the digital reference backend on hard drift,
 and re-fits per-column scales in place via ``recalibrate()``.
+
+Telemetry (DESIGN.md §12): every engine owns a ``repro.obs``
+``MetricsRegistry`` (pass ``metrics=`` to share one). Request lifecycle
+is traced — queue wait, prefill and per-decode-step spans land in the
+registry's histograms and event log; token/request counters and queue
+depth/active-slot gauges update as the slots churn. ``metrics()`` folds
+all of it with ``health()``, derived throughput and — when the
+``repro.obs.adc`` collector is armed — the ADC saturation summary into
+one JSON-safe view; ``launch/serve.py --metrics-out`` writes exactly
+that. When the collector is armed the monitor additionally ingests an
+``adc_clip_rate`` statistic per step, so drift detection can trigger on
+column clipping directly.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import sys
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -29,6 +43,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.variation import DriftSchedule, DriftState, drift_tree
 from repro.models.registry import ModelFns
+from repro.obs import adc as obs_adc
+from repro.obs import names as M
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import Tracer
 
 
 def engine_from_artifact(artifact, cfg: ModelConfig, *, mesh=None,
@@ -158,6 +176,8 @@ class Request:
     eos_id: int = -1                     # -1: run to max_new_tokens
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0                # wall clock at submit()
+    t_admit: float = 0.0                 # wall clock at slot admission
 
 
 class ServingEngine:
@@ -185,7 +205,9 @@ class ServingEngine:
                  health=None,
                  fallback_backend: str = "ref",
                  auto_recalibrate: bool = False,
-                 layout_version: Optional[int] = None):
+                 layout_version: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 report_every: int = 0):
         from repro.nn.module import current_mesh
         self.model, self.cfg, self.params = model, cfg, params
         self.B, self.max_len = batch_size, max_len
@@ -214,12 +236,25 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.last_tok = np.zeros((batch_size, 1), np.int32)
         self._next_rid = 0
+        self.retired = 0                    # requests completed, ever
+        self.registry = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = Tracer(self.registry)
+        self.report_every = report_every    # stderr line every N decode steps
+        self._decode_steps = 0
+        self._last_sat = 0                  # adc totals at last observation,
+        self._last_conv = 0                 # for the per-step clip-rate delta
 
     def submit(self, prompt, max_new_tokens: int, eos_id: int = -1) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, eos_id))
+        req = Request(rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id, t_submit=time.time())
+        self.queue.append(req)
+        self.registry.counter(M.REQUESTS_SUBMITTED).inc()
+        self.registry.gauge(M.QUEUE_DEPTH).set(len(self.queue))
+        self.registry.log_event("request_submitted", rid=rid,
+                                prompt_len=int(req.prompt.shape[0]),
+                                max_new_tokens=max_new_tokens)
         return rid
 
     # -- self-healing internals ----------------------------------------------
@@ -250,15 +285,31 @@ class ServingEngine:
             return nxt
         nxt, self.cache, stats = self._step_fn(self.params, self.cache,
                                                tokens, sub, t)
-        if self.monitor is not None and stats:
-            self.monitor.observe({k: float(v) for k, v in stats.items()})
-            if self.monitor.hard_drifted and not self.fallback_active:
-                self.monitor.hard_events += 1
-                if self.auto_recalibrate:
-                    self.recalibrate()
-                elif self.fallback_backend:
-                    self.fallback_active = True
+        self._observe_health(stats)
         return nxt
+
+    def _observe_health(self, stats) -> None:
+        """Feed one step's statistics to the drift monitor and react.
+        When the ADC collector is armed, the folded saturation totals
+        since the previous observation become an ``adc_clip_rate``
+        statistic — the paper-native drift signal (DESIGN.md §12)."""
+        if self.monitor is None or not stats:
+            return
+        host = {k: float(v) for k, v in stats.items()}
+        if obs_adc.enabled():
+            obs_adc.sync()
+            sat, conv = obs_adc.totals()
+            d_sat, d_conv = sat - self._last_sat, conv - self._last_conv
+            self._last_sat, self._last_conv = sat, conv
+            if d_conv > 0:
+                host["adc_clip_rate"] = d_sat / d_conv
+        self.monitor.observe(host)
+        if self.monitor.hard_drifted and not self.fallback_active:
+            self.monitor.hard_events += 1
+            if self.auto_recalibrate:
+                self.recalibrate()
+            elif self.fallback_backend:
+                self.fallback_active = True
 
     def params_clean(self):
         """The pristine packed tree (digit storage does not drift)."""
@@ -301,11 +352,14 @@ class ServingEngine:
         self.fallback_active = False
         if self.monitor is not None:
             self.monitor.note_recalibration()
+        self.registry.counter(M.RECALIBRATIONS).inc()
+        self.registry.log_event("recalibration", t=int(self.t), probes=probes)
         return delta
 
     def health(self) -> Dict:
         """Snapshot of the self-healing state: monitor counters (when a
-        monitor is armed) plus the engine's own drift/fallback status."""
+        monitor is armed), the engine's own drift/fallback status, and
+        the admission state — queue depth, active and retired slots."""
         snap = self.monitor.snapshot() if self.monitor is not None else {}
         snap.update({
             "t": self.t,
@@ -314,8 +368,60 @@ class ServingEngine:
                          and self.drift_schedule is not None
                          and not self.drift_schedule.is_static_zero),
             "mesh": None if self.mesh is None else repr(self.mesh),
+            "queue_depth": len(self.queue),
+            "active_slots": sum(s is not None for s in self.slots),
+            "slots": self.B,
+            "submitted": self._next_rid,
+            "retired": self.retired,
         })
         return snap
+
+    def metrics(self) -> Dict:
+        """One folded telemetry view (DESIGN.md §12): ``health()`` plus
+        derived throughput, the ADC saturation summary (when the
+        collector is armed) and the full registry snapshot. JSON-safe —
+        ``launch/serve.py --metrics-out`` dumps it verbatim."""
+        if obs_adc.enabled():
+            obs_adc.sync()
+        toks = self.registry.counter(M.TOKENS_GENERATED).value
+        dec = self.registry.histogram(M.DECODE_STEP_SECONDS)
+        tps = toks / dec.sum if dec.sum > 0 else 0.0
+        n_dev = 1 if self.mesh is None else int(self.mesh.devices.size)
+        return {
+            "health": self.health(),
+            "throughput": {
+                "tokens_generated": toks,
+                "decode_steps": dec.count,
+                "decode_seconds": dec.sum,
+                "tokens_per_sec": tps,
+                "devices": n_dev,
+                "tokens_per_sec_per_device": tps / n_dev,
+            },
+            "saturation": obs_adc.summary() if obs_adc.enabled() else None,
+            "metrics": self.registry.snapshot(),
+        }
+
+    def _maybe_report(self) -> None:
+        """Periodic one-line operator report on stderr (``report_every``
+        decode steps; 0 = off)."""
+        if not self.report_every:
+            return
+        if self._decode_steps % self.report_every:
+            return
+        toks = self.registry.counter(M.TOKENS_GENERATED).value
+        dec = self.registry.histogram(M.DECODE_STEP_SECONDS)
+        tps = toks / dec.sum if dec.sum > 0 else 0.0
+        line = (f"[serve.metrics] t={self.t} tokens={toks} tok/s={tps:.1f} "
+                f"queue={len(self.queue)} "
+                f"active={sum(s is not None for s in self.slots)}/{self.B} "
+                f"retired={self.retired}")
+        if self.monitor is not None:
+            line += (f" score={self.monitor.score:.2f}"
+                     f" fallback={self.fallback_active}")
+        if obs_adc.enabled():
+            s = obs_adc.summary()
+            line += f" clip_rate={s['clip_rate']:.4f}"
+        print(line, file=sys.stderr)
 
     # -- internals -----------------------------------------------------------
     def _admit(self):
@@ -326,15 +432,23 @@ class ServingEngine:
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slots[i] = req
-                for t in req.prompt:
-                    tok = np.array(self.last_tok)
-                    tok[i, 0] = t
-                    self.key, sub = jax.random.split(self.key)
-                    nxt = self._invoke_step(jnp.asarray(tok), sub)
-                    nxt = np.asarray(nxt)
-                    # only slot i's cache row advanced meaningfully; other
-                    # slots consumed a dummy token -> rewind their outputs
-                    self.last_tok[i, 0] = nxt[i, 0]
+                req.t_admit = time.time()
+                self.registry.histogram(M.QUEUE_WAIT_SECONDS).observe(
+                    req.t_admit - req.t_submit)
+                with self.tracer.span("serve.prefill", rid=req.rid,
+                                      tokens=int(req.prompt.shape[0])):
+                    for t in req.prompt:
+                        tok = np.array(self.last_tok)
+                        tok[i, 0] = t
+                        self.key, sub = jax.random.split(self.key)
+                        nxt = self._invoke_step(jnp.asarray(tok), sub)
+                        nxt = np.asarray(nxt)
+                        # only slot i's cache row advanced meaningfully;
+                        # other slots consumed a dummy token -> rewind
+                        self.last_tok[i, 0] = nxt[i, 0]
+                self.registry.gauge(M.QUEUE_DEPTH).set(len(self.queue))
+                self.registry.gauge(M.ACTIVE_SLOTS).set(
+                    sum(s is not None for s in self.slots))
         # NOTE: per-slot prefill advances other slots' caches too; engine
         # correctness relies on all slots being empty or synchronized. For
         # mixed workloads use `ServingEngine.generate_batch` (lockstep).
@@ -346,8 +460,14 @@ class ServingEngine:
         if all(s is None for s in self.slots):
             return []
         self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(self._invoke_step(jnp.asarray(self.last_tok), sub))
+        with self.tracer.span("serve.decode.step"):
+            nxt = np.asarray(self._invoke_step(jnp.asarray(self.last_tok),
+                                               sub))
+        self._decode_steps += 1
+        active = sum(s is not None for s in self.slots)
+        self.registry.counter(M.TOKENS_GENERATED).inc(active)
         finished = []
+        now = time.time()
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -358,6 +478,19 @@ class ServingEngine:
                 req.done = True
                 finished.append({"rid": req.rid, "tokens": req.output})
                 self.slots[i] = None
+                self.retired += 1
+                self.registry.counter(M.REQUESTS_COMPLETED).inc()
+                self.registry.histogram(M.REQUEST_LATENCY_SECONDS).observe(
+                    now - req.t_submit)
+                self.registry.log_event(
+                    "request_completed", rid=req.rid,
+                    tokens=len(req.output),
+                    latency=now - req.t_submit,
+                    queue_wait=req.t_admit - req.t_submit)
+        if finished:
+            self.registry.gauge(M.ACTIVE_SLOTS).set(
+                sum(s is not None for s in self.slots))
+        self._maybe_report()
         return finished
 
     # -- the simple, correct batched API --------------------------------------
@@ -367,30 +500,31 @@ class ServingEngine:
         self._check_mesh("generate_batch")
         assert prompts.shape[0] == self.B
         cache = self.model.init_cache(self.cfg, self.B, self.max_len)
-        logits, cache = self._prefill_fn(self.params, cache,
-                                         jnp.asarray(prompts),
-                                         jnp.int32(self.t))
-        self.t += 1
-        tok = jnp.argmax(logits[:, -1:, :].astype(jnp.float32), axis=-1
-                         ).astype(jnp.int32)
-        outs = [np.asarray(tok)]
+        with self.tracer.span("serve.prefill", tokens=int(prompts.shape[1]),
+                              batch=self.B):
+            logits, cache = self._prefill_fn(self.params, cache,
+                                             jnp.asarray(prompts),
+                                             jnp.int32(self.t))
+            self.t += 1
+            tok = jnp.argmax(logits[:, -1:, :].astype(jnp.float32), axis=-1
+                             ).astype(jnp.int32)
+            outs = [np.asarray(tok)]
+        self.registry.counter(M.TOKENS_GENERATED).inc(self.B)
         for _ in range(max_new_tokens - 1):
             self.key, sub = jax.random.split(self.key)
             t = jnp.int32(self.t)
             self.t += 1
-            if self.fallback_active:
-                tok, cache = self._fallback()(self.params_clean(), cache,
-                                              tok, sub)
+            with self.tracer.span("serve.decode.step"):
+                if self.fallback_active:
+                    tok, cache = self._fallback()(self.params_clean(), cache,
+                                                  tok, sub)
+                    stats = {}
+                else:
+                    tok, cache, stats = self._step_fn(self.params, cache,
+                                                      tok, sub, t)
                 outs.append(np.asarray(tok))
-                continue
-            tok, cache, stats = self._step_fn(self.params, cache, tok, sub, t)
-            outs.append(np.asarray(tok))
-            if self.monitor is not None and stats:
-                self.monitor.observe({k: float(v) for k, v in stats.items()})
-                if self.monitor.hard_drifted and not self.fallback_active:
-                    self.monitor.hard_events += 1
-                    if self.auto_recalibrate:
-                        self.recalibrate()
-                    elif self.fallback_backend:
-                        self.fallback_active = True
+            self._decode_steps += 1
+            self.registry.counter(M.TOKENS_GENERATED).inc(self.B)
+            self._observe_health(stats)
+            self._maybe_report()
         return np.concatenate(outs, axis=1)

@@ -18,6 +18,24 @@ warranted); ``hard_threshold`` marks serving-quality danger — the engine
 reacts by falling back to its digital reference backend until a
 recalibration lands (serve/engine.py).
 
+Hysteresis is explicit and deterministic. ``drifted``/``hard_drifted``
+are gated on two conditions besides the score:
+
+* **warmup**: every tracked statistic must have finished its baseline
+  (``warmed_up``). A statistic mid-calibration has no meaningful z-score,
+  so scores computed while any baseline is still forming never latch —
+  including a statistic that first appears late (e.g. the ADC clip rate
+  arriving only once sampling is armed).
+* **post-recalibration grace**: ``note_recalibration()`` opens a
+  deterministic grace window — the flags stay suppressed until
+  ``hysteresis`` further observations have been folded; the
+  ``hysteresis``-th observation after the recalibration is the first
+  that can re-assert them. The EWMAs are re-seeded on the baseline at
+  the same moment, so past the window the flags re-assert only if the
+  *fresh* statistics still excurse — a recalibration that actually fixed
+  the chip stays green, a cosmetic one goes red again ``hysteresis``
+  observations later, always at the same step for the same input stream.
+
 The monitor is plain host-side state: it never traces, never allocates
 on device, and costs a handful of float ops per step.
 """
@@ -44,6 +62,13 @@ class HealthConfig:
     hard_threshold: float = 12.0    # z-units: degrade, serve fallback
     min_std_frac: float = 0.02
     min_std_abs: float = 1e-6
+    hysteresis: int = 4             # post-recal observations before re-latch
+
+    def effective_warmup(self) -> int:
+        """Baseline length actually used: ``warmup=0`` would leave a
+        statistic with no baseline at all (mean/std of nothing), so the
+        floor is one observation."""
+        return max(1, self.warmup)
 
 
 @dataclasses.dataclass
@@ -68,6 +93,7 @@ class DriftMonitor:
         self.drifted_at: Optional[int] = None   # step of first soft crossing
         self.hard_events = 0
         self.recalibrations = 0
+        self._grace = 0             # post-recal observations still to skip
 
     # -- ingestion -----------------------------------------------------------
 
@@ -75,13 +101,15 @@ class DriftMonitor:
         """Fold one step's statistics in; returns the current score."""
         cfg = self.config
         self.steps += 1
+        if self._grace > 0:
+            self._grace -= 1
         score = 0.0
         for name, value in stats.items():
             v = float(value)
             if not math.isfinite(v):
                 continue
             st = self._stats.setdefault(name, _Stat())
-            if st.n < cfg.warmup:
+            if st.n < cfg.effective_warmup():
                 # calibration phase: accumulate the healthy baseline
                 st.n += 1
                 d = v - st.mean
@@ -95,36 +123,46 @@ class DriftMonitor:
             z = abs(st.ewma - st.mean) / max(st.std(), floor)
             score = max(score, z)
         self.score = score
-        if score >= cfg.soft_threshold and self.drifted_at is None:
+        if self.drifted and self.drifted_at is None:
             self.drifted_at = self.steps
         return score
 
     def note_recalibration(self) -> None:
-        """A recalibration landed: count it and re-seed the EWMAs on the
+        """A recalibration landed: count it, re-seed the EWMAs on the
         baseline so the score relaxes immediately instead of waiting out
         the smoothing horizon (the drifted history is no longer serving
-        reality)."""
+        reality), clear the latch, and open the ``hysteresis`` grace
+        window (module docstring)."""
         self.recalibrations += 1
         for st in self._stats.values():
             if st.n > 0:
                 st.ewma = st.mean
         self.score = 0.0
+        self.drifted_at = None
+        self._grace = self.config.hysteresis
 
     # -- queries -------------------------------------------------------------
 
     @property
     def warmed_up(self) -> bool:
-        cfg = self.config
+        w = self.config.effective_warmup()
         return bool(self._stats) and all(
-            s.n >= cfg.warmup for s in self._stats.values())
+            s.n >= w for s in self._stats.values())
+
+    @property
+    def in_grace(self) -> bool:
+        """Inside the post-recalibration hysteresis window."""
+        return self._grace > 0
 
     @property
     def drifted(self) -> bool:
-        return self.score >= self.config.soft_threshold
+        return (self.warmed_up and not self.in_grace
+                and self.score >= self.config.soft_threshold)
 
     @property
     def hard_drifted(self) -> bool:
-        return self.score >= self.config.hard_threshold
+        return (self.warmed_up and not self.in_grace
+                and self.score >= self.config.hard_threshold)
 
     def snapshot(self) -> Dict[str, object]:
         """Counters + per-stat state for an engine ``health()`` call."""
@@ -137,6 +175,7 @@ class DriftMonitor:
             "hard_events": self.hard_events,
             "recalibrations": self.recalibrations,
             "warmed_up": self.warmed_up,
+            "grace": self._grace,
             "stats": {
                 name: {"baseline_mean": st.mean, "baseline_std": st.std(),
                        "ewma": st.ewma, "n": st.n}

@@ -159,6 +159,63 @@ def test_monitor_ignores_nonfinite_and_scales_floor():
     assert np.isfinite(s) and s > 0
 
 
+def test_monitor_no_latch_before_warmup():
+    """Scores computed while any baseline is still forming never latch —
+    even against a zero threshold (PR 7 edge-case fix)."""
+    mon = DriftMonitor(HealthConfig(warmup=8, soft_threshold=0.0,
+                                    hard_threshold=0.0))
+    for i in range(7):
+        mon.observe({"m": float(i * 100)})         # wild swings mid-warmup
+    assert not mon.warmed_up
+    assert not mon.drifted and not mon.hard_drifted
+    assert mon.drifted_at is None
+    # a statistic that first appears late re-closes the gate
+    mon2 = DriftMonitor(HealthConfig(warmup=2, soft_threshold=0.0,
+                                     hard_threshold=0.0))
+    for _ in range(3):
+        mon2.observe({"a": 1.0})
+    assert mon2.drifted                            # zero threshold, warmed
+    mon2.observe({"a": 1.0, "b": 5.0})             # "b" starts its baseline
+    assert not mon2.warmed_up and not mon2.hard_drifted
+
+
+def test_monitor_warmup_zero_is_safe():
+    """warmup=0 historically crashed (no baseline, ewma=None in the
+    post-warmup branch); the effective warmup floor is one observation."""
+    mon = DriftMonitor(HealthConfig(warmup=0))
+    s = mon.observe({"m": 1.0})
+    assert np.isfinite(s)
+    assert not mon.drifted and not mon.hard_drifted
+    s = mon.observe({"m": 1.1})
+    assert np.isfinite(s)
+
+
+def test_monitor_recal_hysteresis_deterministic():
+    """observe() immediately after note_recalibration() must not latch
+    hard_drifted: the grace window suppresses both flags for exactly
+    ``hysteresis`` observations, then they re-assert on the same step
+    for the same input stream."""
+    cfgm = HealthConfig(warmup=4, soft_threshold=1.0, hard_threshold=1.0,
+                        hysteresis=3, ewma=1.0)
+    mon = DriftMonitor(cfgm)
+    for _ in range(4):
+        mon.observe({"m": 1.0})
+    mon.observe({"m": 100.0})
+    assert mon.hard_drifted and mon.drifted_at is not None
+    mon.note_recalibration()
+    assert mon.drifted_at is None and mon.in_grace
+    assert not mon.hard_drifted                    # immediately after recal
+    latched_at = None
+    for i in range(1, 6):
+        mon.observe({"m": 100.0})
+        if latched_at is None and mon.hard_drifted:
+            latched_at = i
+    # the hysteresis-th observation after the recal is the first that can
+    # re-assert the flags — deterministically
+    assert latched_at == cfgm.hysteresis
+    assert mon.drifted_at is not None
+
+
 # ---------------------------------------------------------------------------
 # recalibration math
 # ---------------------------------------------------------------------------

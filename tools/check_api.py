@@ -24,6 +24,7 @@ MODULES = (
     "repro.api",
     "repro.core",
     "repro.checkpoint",
+    "repro.obs",
     "repro.serve",
 )
 
