@@ -17,9 +17,11 @@ On-disk layout::
 ``pack_model`` generalizes the per-layer pack to arbitrary param trees:
 any dict node carrying the CIM-layer quartet {w, s_w, s_p, s_a} is
 packed (linear for 2-D weights, conv for 4-D HWIO; stacked
-scan-over-layers variants vmap over the leading layer axis); every other
-node — embeddings, norms, biases, full-precision stems, MoE expert
-banks — passes through untouched.
+scan-over-layers variants vmap over the leading layer axis), and MoE
+expert banks — flat ``nm``/``nm_s_w``/``nm_s_p``/``nm_s_a`` keys with a
+leading expert axis — pack per expert into ``nm_digits`` planes with
+per-expert column scales. Every other node — embeddings, norms, biases,
+full-precision stems — passes through untouched.
 """
 from __future__ import annotations
 
@@ -207,8 +209,9 @@ class DeployArtifact:
 
         def place(node):
             if isinstance(node, dict):
-                if "w_digits" in node and n_dev > 1:
-                    return _shard_node(node, mesh, mesh_axis, n_dev, rep)
+                if n_dev > 1 and any(k.endswith("_digits") for k in node):
+                    return _shard_node(node, mesh, mesh_axis, n_dev, rep,
+                                       place)
                 return {k: place(v) for k, v in node.items()}
             if isinstance(node, (list, tuple)):
                 return [place(v) for v in node]
@@ -231,6 +234,42 @@ def _is_cim_layer(node: Dict) -> bool:
 # per-node key derivation shared with drift injection and delta fitting
 _path_key = path_fold_key
 
+_BANK_SCALES = ("s_w", "s_p", "s_a")
+
+
+def _bank_names(node: Dict) -> list:
+    """Expert-bank weights inside a dict node: array-valued keys ``nm`` of
+    rank 3 ((E, K, N)) or 4 ((L, E, K, N) under ``stack_specs``) whose
+    per-expert scales ride alongside as ``nm_s_w``/``nm_s_p``/``nm_s_a``
+    (the ``models.layers.moe_specs`` flat-bank convention). The quartet
+    convention never collides: a quartet's scales are unprefixed."""
+    return [nm for nm, v in node.items()
+            if getattr(v, "ndim", 0) in (3, 4)
+            and all(f"{nm}_{s}" in node for s in _BANK_SCALES)]
+
+
+def _pack_bank(node: Dict, nm: str, cfg: CIMConfig, vkey, variation_std):
+    """Pack one expert bank: vmap ``_pack_linear`` over the flattened
+    leading (layer-stack x expert) axes, then restore them. Outputs keep
+    the flat-key convention (``nm_digits``/``nm_s_w``/... ) so router and
+    shared-expert siblings stay untouched in the same node."""
+    bank = {"w": jnp.asarray(node[nm]).astype(jnp.float32),
+            **{s: node[f"{nm}_{s}"] for s in _BANK_SCALES}}
+    lead = bank["w"].shape[:-2]
+    nl = len(lead)
+    flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[nl:]), bank)
+    if vkey is None:
+        packed = jax.vmap(lambda p: _pack_linear(p, cfg))(flat)
+    else:
+        keys = jax.random.split(vkey, flat["w"].shape[0])
+        packed = jax.vmap(lambda p, k: _pack_linear(
+            p, cfg, variation_key=k,
+            variation_std=variation_std))(flat, keys)
+    packed = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]), packed)
+    return {f"{nm}_digits": packed["w_digits"],
+            f"{nm}_k_logical": packed["k_logical"],
+            **{f"{nm}_{s}": packed[s] for s in _BANK_SCALES}}
+
 
 def pack_model(params: Dict, cfg: CIMConfig, *,
                variation_key: Optional[jax.Array] = None,
@@ -240,10 +279,13 @@ def pack_model(params: Dict, cfg: CIMConfig, *,
     A node is a CIM layer iff it carries {w, s_w, s_p, s_a}: 2-D ``w`` is
     a linear layer, 4-D an HWIO conv; 3-D/5-D are their stacked
     (scan-over-layers) forms, packed with a vmap over the layer axis.
-    Full-precision nodes (no scales) pass through, so the same walk
-    handles ResNets (fp stem/fc, BN), transformers (embeddings, norms,
-    stacked blocks) and MoE trees (expert banks stay emulate — their
-    deploy story is per-expert packing, not digit planes in a scan).
+    MoE expert banks (flat ``nm``/``nm_s_w``/``nm_s_p``/``nm_s_a`` keys,
+    rank 3/4 with leading expert/layer axes) pack per expert into
+    ``nm_digits`` planes with per-expert column scales — router dispatch
+    (``models.layers._expert_matmul``) picks the packed planes up at
+    call time. Full-precision nodes (no scales) pass through, so the
+    same walk handles ResNets (fp stem/fc, BN), transformers
+    (embeddings, norms, stacked blocks), SSM scan stacks and routers.
 
     ``variation_key``/``variation_std`` bake ONE device realization into
     the planes, with an independent per-layer key folded from the tree
@@ -275,6 +317,20 @@ def pack_model(params: Dict, cfg: CIMConfig, *,
             raise ValueError(f"CIM layer at {'/'.join(path)} has "
                              f"unsupported weight rank {w.ndim}")
         if isinstance(node, dict):
+            banks = _bank_names(node)
+            if banks:
+                out: Dict = {}
+                consumed = set()
+                for nm in banks:
+                    vkey = (None if variation_key is None
+                            else _path_key(variation_key, path + (nm,)))
+                    out.update(_pack_bank(node, nm, cfg, vkey, variation_std))
+                    consumed |= {nm, *(f"{nm}_{s}" for s in _BANK_SCALES)}
+                # siblings (router, shared experts, ...) walk as usual
+                for k, v in node.items():
+                    if k not in consumed:
+                        out[k] = walk(v, path + (k,))
+                return out
             return {k: walk(v, path + (k,)) for k, v in node.items()}
         if isinstance(node, (list, tuple)):
             # recurse so CIM layers inside sequences are packed, and
@@ -303,6 +359,10 @@ def col_shard_axes(packed: Dict) -> Dict[str, int]:
             if "w_digits" in node:
                 out["/".join(path)] = -1
                 return
+            for k in node:
+                # expert banks: one entry per bank, keyed path/<bank name>
+                if k.endswith("_digits"):
+                    out["/".join(path + (k[: -len("_digits")],))] = -1
             for k, v in node.items():
                 walk(v, path + (k,))
         elif isinstance(node, (list, tuple)):
@@ -312,17 +372,35 @@ def col_shard_axes(packed: Dict) -> Dict[str, int]:
     return out
 
 
-def _shard_node(node: Dict, mesh, mesh_axis: str, n_dev: int, rep) -> Dict:
-    """Place one packed CIM node: arrays carrying the node's column axis
+def _shard_node(node: Dict, mesh, mesh_axis: str, n_dev: int, rep,
+                place) -> Dict:
+    """Place one packed CIM node: arrays carrying their bank's column axis
     (last dim == the planes' column count) shard over ``mesh_axis`` when
     the columns divide the device count; everything else replicates.
-    Ragged nodes stay replicated — the kernel wrapper pads and shards
-    them per call (the last-shard padding rule, DESIGN.md §10)."""
+    Ragged banks stay replicated — the kernel wrapper pads and shards
+    them per call (the last-shard padding rule, DESIGN.md §10).
+
+    A quartet node has one bank (``w_digits`` owning the unprefixed
+    ``s_w``/``s_p``/``s_a``/``deq_scale``); a MoE node carries several
+    (``wg_digits`` owning ``wg_s_w``/... ). Sub-dict siblings (router,
+    shared experts) recurse through ``place``."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    n = int(node["w_digits"].shape[-1])
+    banks = {k[: -len("_digits")]: int(node[k].shape[-1])
+             for k in node if k.endswith("_digits")}
+
+    def bank_cols(k):
+        for nm, n in banks.items():
+            if k == f"{nm}_digits" or (nm != "w" and k.startswith(f"{nm}_")):
+                return n
+        return banks.get("w")   # quartet: unprefixed scale keys
+
     out = {}
     for k, v in node.items():
-        cols = (hasattr(v, "ndim") and v.ndim >= 1
+        if isinstance(v, (dict, list, tuple)):
+            out[k] = place(v)
+            continue
+        n = bank_cols(k)
+        cols = (n is not None and hasattr(v, "ndim") and v.ndim >= 1
                 and v.shape[-1] == n and n % n_dev == 0)
         sh = (NamedSharding(mesh, P(*([None] * (v.ndim - 1) + [mesh_axis])))
               if cols else rep)

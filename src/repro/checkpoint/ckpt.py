@@ -49,6 +49,22 @@ def _flatten(tree, path=""):
         yield path, tree
 
 
+def _empty_containers(tree, path=""):
+    """Paths of leafless containers — invisible to _flatten, but part of
+    the tree structure (e.g. parameter-free norm nodes)."""
+    if isinstance(tree, dict):
+        if not tree:
+            yield path, "dict"
+        for k in sorted(tree):
+            yield from _empty_containers(tree[k],
+                                         f"{path}/{k}" if path else str(k))
+    elif isinstance(tree, (tuple, list)):
+        if not tree:
+            yield path, "list"
+        for i, v in enumerate(tree):
+            yield from _empty_containers(v, f"{path}/__{i}")
+
+
 def _unflatten_into(like, flat: Dict[str, np.ndarray], path=""):
     if isinstance(like, dict):
         return {k: _unflatten_into(like[k], flat,
@@ -79,6 +95,9 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
                 np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.uint8))
         manifest["leaves"][path] = {"file": fname, "shape": list(arr.shape),
                                     "dtype": str(arr.dtype)}
+    empty = dict(_empty_containers(tree))
+    if empty:
+        manifest["empty"] = empty
     mpath = os.path.join(tmp, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -101,9 +120,10 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def _load_leaves(ckpt_dir: str, step: Optional[int]) -> Dict[str, np.ndarray]:
-    """Shared restore substrate: {manifest path: leaf} with logical
-    dtypes (bfloat16/int4 via ml_dtypes), newest step when unspecified."""
+def _load_leaves(ckpt_dir: str, step: Optional[int]):
+    """Shared restore substrate: ({manifest path: leaf}, {path: kind} of
+    empty containers) with logical dtypes (bfloat16/int4 via ml_dtypes),
+    newest step when unspecified."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -116,7 +136,7 @@ def _load_leaves(ckpt_dir: str, step: Optional[int]) -> Dict[str, np.ndarray]:
     for p, meta in manifest["leaves"].items():
         raw = np.load(os.path.join(path, meta["file"]))
         flat[p] = raw.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
-    return flat
+    return flat, manifest.get("empty", {})
 
 
 def restore_tree(ckpt_dir: str, step: Optional[int] = None) -> Any:
@@ -124,9 +144,12 @@ def restore_tree(ckpt_dir: str, step: Optional[int] = None) -> Any:
     dict/list structure is rebuilt from the manifest paths. This is what
     self-describing artifacts (``repro.api.DeployArtifact``) load through
     — the artifact on disk is the source of truth, not caller-side specs.
-    Leaves come back as numpy arrays with their logical dtypes."""
+    Leaves come back as numpy arrays with their logical dtypes; leafless
+    containers (recorded in the manifest's ``empty`` section) are
+    reinstated so the structure is byte-for-byte what was saved."""
+    flat, empty = _load_leaves(ckpt_dir, step)
     root: Dict[str, Any] = {}
-    for p, leaf in _load_leaves(ckpt_dir, step).items():
+    for p, leaf in flat.items():
         parts = p.split("/")
         if parts and parts[0] == "":
             parts = parts[1:]   # '/__0'-style paths: root is a list/tuple
@@ -136,6 +159,15 @@ def restore_tree(ckpt_dir: str, step: Optional[int] = None) -> Any:
         for part in parts[:-1]:
             node = node.setdefault(part, {})
         node[parts[-1]] = leaf
+    for p, kind in empty.items():
+        placeholder: Any = {} if kind == "dict" else []
+        if p == "":
+            return placeholder  # whole tree is one empty container
+        parts = [q for q in p.split("/") if q != ""]
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = placeholder
 
     def listify(node):
         if not isinstance(node, dict):
@@ -159,7 +191,7 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``like``. ``shardings`` (matching
     pytree of jax.sharding.Sharding) reshards onto the current mesh."""
-    tree = _unflatten_into(like, _load_leaves(ckpt_dir, step))
+    tree = _unflatten_into(like, _load_leaves(ckpt_dir, step)[0])
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree

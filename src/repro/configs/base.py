@@ -70,6 +70,8 @@ class ModelConfig:
     enc_layers: int = 0          # whisper encoder layers
     n_frontend_tokens: int = 0   # vlm/audio stub tokens (576 patches / 1500 frames)
     frontend_dim: int = 0        # stub embedding dim (defaults to d_model)
+    conv_frontend: bool = False  # real conv frontend (CIM conv kernel) vs stub
+    patch_size: int = 0          # llava conv frontend: square patch edge
     cim: CIMConfig = dataclasses.field(default_factory=CIMConfig)
     cim_lm_head: bool = False    # also CIM-quantize the LM head
     param_dtype: str = "float32"

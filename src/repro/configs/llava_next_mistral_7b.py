@@ -22,4 +22,5 @@ def reduced() -> ModelConfig:
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
         vocab=512, head_dim=16, max_seq=256,
         n_frontend_tokens=16, frontend_dim=32,
+        conv_frontend=True, patch_size=4,      # (16, 16, 3) -> 4x4 patches
     )

@@ -635,8 +635,20 @@ def _expert_matmul(p: Dict, nm: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.nd
                           preferred_element_type=cdt(cfg))
     from repro.api import linear
     from repro.api.backends import is_packed
-    # expert weights keep the emulate layout (deploy packing is a dense-
-    # linear feature; MoE experts quantize identically either way)
+    if is_packed(cfg.cim) and f"{nm}_digits" in p:
+        # packed expert bank (pack_model): per-expert digit planes with
+        # per-expert column scales, dispatched through the fused deploy
+        # path. lax.map (scan) rather than vmap: pallas_call carries no
+        # batching rule, and the column-sharded kernel wrapper is already
+        # proven under scan by the stacked-layer serving path.
+        def one(args):
+            xe, d, s_w, s_p, s_a = args
+            return linear(xe, {"w_digits": d, "s_w": s_w, "s_p": s_p,
+                               "s_a": s_a}, cfg.cim, compute_dtype=cdt(cfg))
+        return jax.lax.map(one, (x, p[f"{nm}_digits"], p[f"{nm}_s_w"],
+                                 p[f"{nm}_s_p"], p[f"{nm}_s_a"]))
+    # unpacked tree on a packed backend: fall back to emulate (identical
+    # quantization arithmetic; only the storage layout differs)
     ecfg = (cfg.cim if not is_packed(cfg.cim)
             else cfg.cim.replace(mode="emulate"))
     def one(xe, we, s_w, s_p, s_a):
@@ -652,7 +664,11 @@ def apply_moe(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     elsewhere (single device, tests)."""
     from repro.nn.module import current_mesh
     mesh = current_mesh()
-    if (cfg.moe_impl != "jit" and mesh is not None
+    # packed expert banks (nm_digits planes) serve through the jit path:
+    # their parallelism is column sharding inside the kernel wrapper
+    # (DESIGN.md §10), not expert-parallel shard_map over raw banks
+    packed_banks = any(k.endswith("_digits") for k in p)
+    if (cfg.moe_impl != "jit" and not packed_banks and mesh is not None
             and "model" in mesh.axis_names
             and cfg.moe.n_experts % mesh.shape["model"] == 0):
         return _apply_moe_ep(p, x, cfg, mesh)

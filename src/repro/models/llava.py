@@ -1,9 +1,16 @@
-"""LLaVA-NeXT-style VLM: Mistral-7B text backbone with a patch-embedding
-STUB frontend per the assignment — ``input_specs`` supplies precomputed
-anyres patch embeddings (B, n_patches, frontend_dim); a 2-layer MLP
-projector maps them into the LM embedding space and they are prepended to
-the token embeddings. Loss masking of image positions is handled by the
-trainer (labels = -100 on image slots).
+"""LLaVA-NeXT-style VLM: Mistral-7B text backbone with a patch frontend.
+A 2-layer MLP projector maps patch embeddings into the LM embedding
+space and they are prepended to the token embeddings. Loss masking of
+image positions is handled by the trainer (labels = -100 on image slots).
+
+Patch embeddings come from either
+  * the STUB path — ``input_specs`` supplies precomputed anyres patch
+    embeddings (B, n_patches, frontend_dim) — or
+  * with ``cfg.conv_frontend``, a ViT-style non-overlapping patch-embed
+    conv (kernel = stride = ``cfg.patch_size``) on raw images
+    (B, H, W, 3), routed through the CIM conv path (the fused
+    ``cim_conv_pallas`` kernel on packed configs). 4-D ``extra_embeds``
+    selects the conv; 3-D stays the stub, so full configs are unchanged.
 """
 from __future__ import annotations
 
@@ -15,7 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.nn.linear import apply_linear, linear_specs
 from repro.nn.module import ParamSpec
 from . import transformer
-from .layers import cdt, pdt
+from .layers import apply_conv, cdt, conv_specs, pdt
 
 
 def specs(cfg: ModelConfig) -> Dict:
@@ -27,7 +34,19 @@ def specs(cfg: ModelConfig) -> Dict:
         "fc2": linear_specs(cfg.d_model, cfg.d_model, in_axis="embed",
                             out_axis="embed", dtype=pdt(cfg)),
     }
+    if cfg.conv_frontend:
+        ps = cfg.patch_size
+        sp["patch_embed"] = conv_specs(ps, ps, 3, fd, cim=cfg.cim)
     return sp
+
+
+def embed_patches(params: Dict, images: jnp.ndarray, cfg: ModelConfig):
+    """Raw images (B, H, W, 3) -> patch embeddings (B, n_patches, fd) via
+    the non-overlapping patch-embed conv (kernel = stride = patch_size)."""
+    ps = cfg.patch_size
+    h = apply_conv(params["patch_embed"], images.astype(cdt(cfg)), cfg.cim,
+                   stride=ps, padding="VALID", compute_dtype=cdt(cfg))
+    return h.reshape(h.shape[0], -1, h.shape[-1])
 
 
 def project_patches(params: Dict, patches: jnp.ndarray, cfg: ModelConfig):
@@ -42,6 +61,8 @@ def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
             extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     img = None
     if extra_embeds is not None:
+        if cfg.conv_frontend and extra_embeds.ndim == 4:
+            extra_embeds = embed_patches(params, extra_embeds, cfg)
         img = project_patches(params, extra_embeds, cfg)
     return transformer.forward(params, tokens, cfg, extra_embeds=img)
 

@@ -41,3 +41,21 @@ def get_model(cfg: ModelConfig) -> ModelFns:
     except KeyError:
         raise KeyError(f"unknown model family {cfg.family!r}; "
                        f"known: {sorted(_FAMILIES)}") from None
+
+
+def frontend_input_shape(cfg: ModelConfig, batch: int):
+    """Shape of the ``frontend`` batch entry a config's forward expects:
+    raw conv-frontend input (log-mel frames / images) when
+    ``cfg.conv_frontend``, stub embeddings otherwise; None for text-only
+    models. Tests, examples and launchers build inputs from this so the
+    stub-vs-conv decision lives in one place."""
+    if cfg.n_frontend_tokens == 0 or cfg.family not in ("whisper", "llava"):
+        return None
+    fd = cfg.frontend_dim or cfg.d_model
+    if not cfg.conv_frontend:
+        return (batch, cfg.n_frontend_tokens, fd)
+    if cfg.family == "whisper":
+        # two raw frames per encoder token (the stride-2 conv2)
+        return (batch, 2 * cfg.n_frontend_tokens, fd)
+    side = int(round(cfg.n_frontend_tokens ** 0.5)) * cfg.patch_size
+    return (batch, side, side, 3)

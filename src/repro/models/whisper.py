@@ -1,10 +1,16 @@
-"""Whisper-style encoder-decoder (arXiv:2212.04356): transformer backbone
-only — the conv/log-mel audio frontend is a STUB per the assignment
-(``input_specs`` supplies precomputed frame embeddings (B, n_frames, d)).
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
 
 Encoder: bidirectional self-attention over frames + learned positions.
 Decoder: causal self-attention (KV-cached) + cross-attention to the
 encoder output (K/V computed once at prefill and cached).
+
+Frontend: with ``cfg.conv_frontend`` the paper-faithful two-conv stem
+(GELU(conv k=3) -> GELU(conv k=3, stride 2)) runs on raw log-mel frames
+(B, 2*n_frontend_tokens, n_mels=frontend_dim) through the CIM conv path
+— on packed configs that is the fused ``cim_conv_pallas`` deploy kernel.
+Stub inputs (precomputed (B, n_frames, d_model) frame embeddings) are
+still accepted and bypass the stem, keyed on the trailing dim, so full
+configs and existing launch cells are unchanged.
 """
 from __future__ import annotations
 
@@ -17,8 +23,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.nn.linear import apply_linear, linear_specs
 from repro.nn.module import ParamSpec, stack_specs
-from .layers import (apply_mlp, apply_norm, cdt, gqa_attend, gqa_specs,
-                     mlp_specs, norm_specs, pdt)
+from .layers import (apply_conv, apply_mlp, apply_norm, cdt, conv_specs,
+                     gqa_attend, gqa_specs, mlp_specs, norm_specs, pdt)
 
 
 def _enc_block_specs(cfg):
@@ -33,7 +39,7 @@ def _dec_block_specs(cfg):
 
 
 def specs(cfg: ModelConfig) -> Dict:
-    return {
+    sp = {
         "enc_pos": ParamSpec((cfg.n_frontend_tokens, cfg.d_model), pdt(cfg),
                              "normal:0.01", (None, "embed")),
         "enc_layers": stack_specs(_enc_block_specs(cfg), cfg.enc_layers),
@@ -45,10 +51,36 @@ def specs(cfg: ModelConfig) -> Dict:
         "dec_layers": stack_specs(_dec_block_specs(cfg), cfg.n_layers),
         "dec_ln_f": norm_specs(cfg),
     }
+    if cfg.conv_frontend:
+        n_mels = cfg.frontend_dim or cfg.d_model
+        sp["frontend"] = {
+            "conv1": conv_specs(1, 3, n_mels, cfg.d_model, cim=cfg.cim,
+                                out_axis="embed"),
+            "conv2": conv_specs(1, 3, cfg.d_model, cfg.d_model, cim=cfg.cim,
+                                out_axis="embed"),
+        }
+    return sp
+
+
+def _conv_stem(params: Dict, mel: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Raw log-mel (B, 2*n_frontend_tokens, n_mels) -> (B, F, d_model)
+    via the paper-faithful conv stem (time viewed as the W axis of an
+    H=1 NHWC image; stride 2 on conv2 halves the frame rate)."""
+    h = mel.astype(cdt(cfg))[:, None]                   # (B, 1, 2F, mels)
+    h = apply_conv(params["frontend"]["conv1"], h, cfg.cim, stride=1,
+                   padding="SAME", compute_dtype=cdt(cfg))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cdt(cfg))
+    h = apply_conv(params["frontend"]["conv2"], h, cfg.cim, stride=2,
+                   padding="SAME", compute_dtype=cdt(cfg))
+    return jax.nn.gelu(h.astype(jnp.float32)).astype(cdt(cfg))[:, 0]
 
 
 def encode(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
-    """frames: (B, n_frames, d) stub embeddings -> encoder states."""
+    """frames: raw log-mel (B, 2F, n_mels) when the conv frontend is on
+    (trailing dim != d_model), else stub embeddings (B, F, d) -> encoder
+    states."""
+    if cfg.conv_frontend and frames.shape[-1] != cfg.d_model:
+        frames = _conv_stem(params, frames, cfg)
     x = frames.astype(cdt(cfg)) + params["enc_pos"][None, :frames.shape[1]
                                                     ].astype(cdt(cfg))
     positions = jnp.arange(x.shape[1])

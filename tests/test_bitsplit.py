@@ -44,6 +44,46 @@ def test_digit_ranges_fit_cells(wb_cb, seed):
     assert np.all(d * signs >= 0)
 
 
+@settings(max_examples=40, deadline=None)
+@given(
+    wb_cb=st.sampled_from([(2, 1), (3, 1), (3, 2), (4, 2), (4, 3), (6, 2),
+                           (6, 3), (8, 2), (8, 3)]),
+    store=st.sampled_from(["int8", "int4"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_store_dtype_roundtrip(wb_cb, store, seed):
+    """Digit planes survive the deploy storage cast losslessly: int8
+    always; int4 whenever cells are <= 3 bits (|digit| <= 7) — the
+    exact rule CIMConfig.store_dtype applies."""
+    wb, cb = wb_cb
+    rng = np.random.RandomState(seed)
+    w = rng.randint(-(2 ** (wb - 1)), 2 ** (wb - 1), size=(17, 5)
+                    ).astype(np.float32)
+    d = split_digits(jnp.asarray(w), wb, cb)
+    dt = jnp.int4 if (store == "int4" and cb <= 3) else jnp.int8
+    stored = d.astype(dt)
+    r = recombine(stored.astype(jnp.float32), wb, cb)
+    assert np.array_equal(np.asarray(r), w)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    kn=st.sampled_from([(7, 3), (13, 31), (32, 33), (33, 32), (1, 1),
+                        (50, 17)]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_roundtrip_ragged_shapes(kn, seed):
+    """Round trip is exact for ragged (K, N) that don't divide the CIM
+    array dims — packing pads tiles, but the digits themselves are
+    shape-agnostic."""
+    k, n = kn
+    rng = np.random.RandomState(seed)
+    w = rng.randint(-8, 8, size=(k, n)).astype(np.float32)
+    d = split_digits(jnp.asarray(w), 4, 2)
+    assert d.shape == (2, k, n)
+    assert np.array_equal(np.asarray(recombine(d, 4, 2)), w)
+
+
 def test_place_values():
     assert np.allclose(np.asarray(place_values(4, 2)), [1.0, 4.0])
     assert np.allclose(np.asarray(place_values(3, 1)), [1.0, 2.0, 4.0])

@@ -28,6 +28,24 @@ def test_roundtrip(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+def test_restore_tree_preserves_empty_containers(tmp_path):
+    """Leafless nodes (e.g. parameter-free norm dicts) are part of the
+    tree structure: template-free restore must reinstate them, not drop
+    them — a forward over the restored tree would KeyError otherwise."""
+    from repro.checkpoint.ckpt import restore_tree
+    tree = {"layers": {"ln1": {}, "attn": {"w": jnp.ones((2, 2))},
+                       "taps": []},
+            "x": jnp.zeros((3,))}
+    save(str(tmp_path), 0, tree)
+    out = restore_tree(str(tmp_path))
+    assert out["layers"]["ln1"] == {}
+    assert out["layers"]["taps"] == []
+    assert jax.tree.structure(tree) == jax.tree.structure(out)
+    # templated restore is unaffected
+    out2 = restore(str(tmp_path), tree)
+    assert jax.tree.structure(tree) == jax.tree.structure(out2)
+
+
 def test_atomicity_no_partial_checkpoints(tmp_path):
     """A .tmp directory must never be picked up as a valid checkpoint."""
     tree = _tree()

@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.quantizer import lsq_fake_quant, qrange, round_ste
+from repro.core.granularity import ArrayTiling, Granularity
+from repro.core.quantizer import (init_scale_from, lsq_fake_quant, qrange,
+                                  round_ste)
 
 
 @given(bits=st.integers(2, 8), signed=st.booleans())
@@ -74,6 +76,72 @@ def test_binary_sign_quantization():
 def test_round_ste_grad_is_identity():
     g = jax.grad(lambda x: round_ste(x).sum())(jnp.asarray([0.3, 1.7]))
     assert np.allclose(np.asarray(g), 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    kn=st.sampled_from([(48, 40), (33, 17), (100, 7), (31, 65), (5, 3)]),
+    g=st.sampled_from([Granularity.LAYER, Granularity.ARRAY,
+                       Granularity.COLUMN]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_granularity_modes_quantize_on_group_grid(kn, g, seed):
+    """All three granularity modes (paper Fig. 1), including ragged (K, N)
+    that don't divide the array dims: a scale parameter of the mode's
+    shape broadcasts to (k_tiles, N), and fake-quant with the broadcast
+    scale puts every element on its own group's integer grid."""
+    k, n = kn
+    t = ArrayTiling(k=k, n=n, array_rows=32, array_cols=32,
+                    weight_bits=4, cell_bits=2)
+    rng = np.random.RandomState(seed)
+    s = jnp.asarray(rng.uniform(0.05, 2.0, t.weight_scale_shape(g)),
+                    jnp.float32)
+    full = t.broadcast_weight_scale(s)
+    assert full.shape == (t.k_tiles, t.n)
+    # quantize a (k_tiles, N) tensor with per-group scales
+    x = jnp.asarray(rng.randn(t.k_tiles, n), jnp.float32)
+    y = lsq_fake_quant(x, full, bits=4,
+                       group_size=t.weight_group_size(g))
+    codes = np.asarray(y) / np.asarray(full)
+    assert np.allclose(codes, np.round(codes), atol=1e-4)
+    qn, qp = qrange(4, True)
+    assert codes.min() >= qn - 1e-4 and codes.max() <= qp + 1e-4
+    # the psum side indexes (split, k_tile, col); same broadcast contract
+    sp = jnp.asarray(rng.uniform(0.05, 2.0, t.psum_scale_shape(g)),
+                     jnp.float32)
+    assert t.broadcast_psum_scale(sp).shape == (t.n_split, t.k_tiles, t.n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kn=st.sampled_from([(48, 40), (33, 17), (100, 7)]),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_init_scale_shapes_and_positivity(kn, bits, seed):
+    """LSQ scale init produces strictly positive scales at the parameter
+    shape of every granularity mode."""
+    k, n = kn
+    t = ArrayTiling(k=k, n=n, array_rows=32, array_cols=32,
+                    weight_bits=4, cell_bits=2)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (t.k_tiles, t.n))
+    for g, axes in ((Granularity.LAYER, (0, 1)), (Granularity.COLUMN, ())):
+        shape = t.weight_scale_shape(g)
+        s = init_scale_from(x, bits, axes, shape)
+        assert s.shape == shape
+        assert bool(jnp.all(s > 0))
+
+
+def test_dequant_muls_column_alignment_is_free():
+    """Paper Fig. 4: aligning weights AND psums at COLUMN costs exactly
+    as many dequant muls as LAYER-weight + COLUMN-psum — the zero-overhead
+    observation that motivates column-wise weight scales."""
+    t = ArrayTiling(k=96, n=64, array_rows=32, array_cols=32,
+                    weight_bits=4, cell_bits=2)
+    both_col = t.dequant_muls(Granularity.COLUMN, Granularity.COLUMN)
+    layer_w = t.dequant_muls(Granularity.LAYER, Granularity.COLUMN)
+    assert both_col == layer_w
+    assert t.dequant_muls(Granularity.LAYER, Granularity.LAYER) == 1
 
 
 @settings(max_examples=20, deadline=None)

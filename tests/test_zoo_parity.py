@@ -1,0 +1,206 @@
+"""Deploy-vs-emulate parity matrix over the whole config registry.
+
+For every entry in ``repro.configs.registry.ARCHS`` at reduced scale:
+pack (``model_artifact``) -> save -> load -> forward on the fused deploy
+backend vs. the emulate backend, asserting
+
+  * logits within 5e-2 relative (the serving gate), and bit-identical
+    for the entries where emulate/deploy agree exactly today (EXACT);
+  * the artifact round-trips bit-exactly through disk;
+  * every structured CIM node actually packed (digit-plane count ==
+    ``meta["col_shard"]`` entries, and architecture-specific nodes —
+    MoE expert banks, SSM scan stacks, encoder convs — are present);
+
+plus a sharded-mesh spot-check for the two MoE entries (skipped below
+4 devices; CI's ``zoo`` job forces a 4-device host).
+
+Marked ``zoo``: excluded from tier-1 by pytest.ini, run as the dedicated
+CI job via ``pytest -m zoo``.
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import DeployArtifact, model_artifact
+from repro.configs.registry import ARCHS, get_config
+from repro.core.cim_linear import CIMConfig
+from repro.models.registry import frontend_input_shape, get_model
+from repro.nn import init_params
+
+pytestmark = pytest.mark.zoo
+
+B, T = 2, 8
+
+CIM = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                act_bits=8, psum_bits=6, array_rows=32, array_cols=32)
+
+# Entries whose emulate and deploy logits are bit-identical today. The
+# rest differ only at float-accumulation-order level (~1e-7 relative):
+# the kernel grid, per-expert lax.map dispatch, and scan-carried layers
+# reassociate the float32 dequant sums. Shrinking this set is a
+# regression.
+EXACT = frozenset({"llama3-8b", "granite-8b", "whisper-small"})
+
+# tolerance for everything (EXACT entries additionally assert equality)
+REL_TOL = 5e-2
+
+MOE_ARCHS = ("moonshot-v1-16b-a3b", "deepseek-v3-671b")
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch):
+    cfg = get_config(arch, reduced=True, cim=CIM).replace(
+        compute_dtype="float32", remat=False)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    fshape = frontend_input_shape(cfg, B)
+    extra = (None if fshape is None
+             else jax.random.normal(jax.random.PRNGKey(2), fshape) * 0.1)
+    return cfg, model, params, tokens, extra
+
+
+def _digit_keys(tree, path=()):
+    """All '/'-joined paths of digit-plane leaves in a packed tree."""
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if k.endswith("_digits"):
+                out.append("/".join(path + (k,)))
+            out.extend(_digit_keys(v, path + (k,)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_digit_keys(v, path + (str(i),)))
+    return out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_deploy_vs_emulate_parity(arch, tmp_path):
+    cfg, model, params, tokens, extra = _setup(arch)
+    em = np.asarray(model.forward(params, tokens, cfg, extra))
+
+    art = model_artifact(params, cfg.cim, meta={"arch": arch})
+    path = str(tmp_path / "artifact")
+    art.save(path)
+    loaded = DeployArtifact.load(path)
+
+    # bit-exact round trip: identical structure (including leafless
+    # nodes, e.g. parameter-free norms) and every leaf identical
+    assert jax.tree.structure(art.params) == jax.tree.structure(loaded.params)
+    flat_a = jax.tree.leaves(art.params)
+    flat_l = jax.tree.leaves(loaded.params)
+    assert len(flat_a) == len(flat_l)
+    for a, b in zip(flat_a, flat_l):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # structural coverage: every CIM node became digit planes, and the
+    # col_shard meta names exactly those nodes
+    digits = _digit_keys(loaded.params)
+    assert digits, f"{arch}: nothing packed"
+    assert len(digits) == len(loaded.meta["col_shard"])
+
+    dcfg = cfg.replace(cim=loaded.config)
+    dp = np.asarray(model.forward(loaded.params, tokens, dcfg, extra))
+
+    assert np.all(np.isfinite(dp))
+    rel = float(np.max(np.abs(em - dp)) / np.max(np.abs(em)))
+    assert rel <= REL_TOL, f"{arch}: deploy vs emulate rel={rel}"
+    if arch in EXACT:
+        np.testing.assert_array_equal(em, dp, err_msg=f"{arch} regressed "
+                                      "from bit-exact deploy parity")
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_moe_banks_packed_per_expert(arch):
+    """MoE entries: expert banks pack as per-expert stacked planes with
+    per-expert column scales, and col_shard records one entry per bank."""
+    cfg, model, params, tokens, extra = _setup(arch)
+    art = model_artifact(params, cfg.cim)
+    moe = art.params["moe_layers"]["moe"]
+    L = cfg.n_layers - cfg.moe.n_dense_layers
+    E = cfg.moe.n_experts
+    for nm, k, n in (("wg", cfg.d_model, cfg.moe.d_ff),
+                     ("wu", cfg.d_model, cfg.moe.d_ff),
+                     ("wd", cfg.moe.d_ff, cfg.d_model)):
+        t = cfg.cim.tiling(k, n)
+        d = moe[f"{nm}_digits"]
+        assert d.shape == (L, E, t.n_split, t.k_tiles, t.array_rows, n)
+        assert d.dtype == cfg.cim.store_dtype()
+        assert moe[f"{nm}_s_w"].shape[:2] == (L, E)   # per-expert scales
+        assert f"moe_layers/moe/{nm}" in art.meta["col_shard"]
+    # the raw banks are gone; router and shared experts ride along
+    assert "wg" not in moe and "router" in moe
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_moe_sharded_mesh_spot_check(arch):
+    """Column-sharded expert planes serve bit-identically to one device."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices (CI zoo job forces 4)")
+    from jax.sharding import Mesh
+    from repro.nn.module import session_mesh
+    cfg, model, params, tokens, extra = _setup(arch)
+    art = model_artifact(params, cfg.cim)
+    dcfg = cfg.replace(cim=art.config)
+    base = np.asarray(model.forward(art.params, tokens, dcfg, extra))
+
+    mesh = Mesh(np.array(jax.devices()[:4]), ("model",))
+    sharded = art.shard(mesh)
+    # expert digit planes actually landed column-sharded
+    d = sharded.params["moe_layers"]["moe"]["wg_digits"]
+    assert len(d.sharding.device_set) == 4
+    with session_mesh(mesh):
+        out = np.asarray(model.forward(sharded.params, tokens, dcfg, extra))
+    np.testing.assert_array_equal(base, out)
+
+
+def test_ssm_scan_weights_served_packed():
+    """zamba2: the mamba2 in/out projections pack as stacked 3-D planes
+    (leading layer axis) and the scan forward consumes them directly."""
+    cfg, model, params, tokens, extra = _setup("zamba2-2.7b")
+    art = model_artifact(params, cfg.cim)
+    mam = art.params["mamba_layers"]
+    for nm in ("in_proj", "out_proj"):
+        d = mam[nm]["w_digits"]
+        assert d.ndim == 5 and d.shape[0] == cfg.n_layers
+        assert f"mamba_layers/{nm}" in art.meta["col_shard"]
+    # shared attention block packs unstacked (4-D planes)
+    assert art.params["shared_attn"]["attn"]["wq"]["w_digits"].ndim == 4
+
+
+def test_serve_whisper_example_token_parity():
+    """The non-transformer serving example end to end: audio in through
+    the conv deploy kernel, ServingEngine decode, and an internal assert
+    that deploy-generated tokens match the emulate engine exactly."""
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(root / "src"))
+    out = subprocess.run(
+        [sys.executable, str(root / "examples" / "serve_whisper_cim.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "tokens match emulate exactly" in out.stdout
+
+
+@pytest.mark.parametrize("arch,node_path", [
+    ("whisper-small", ("frontend", "conv1")),
+    ("whisper-small", ("frontend", "conv2")),
+    ("llava-next-mistral-7b", ("patch_embed",)),
+])
+def test_encoder_convs_pack_as_conv_planes(arch, node_path):
+    """Encoder convs pack into the self-describing 6-D conv-plane layout
+    consumed by the fused ``cim_conv_pallas`` deploy kernel."""
+    cfg, model, params, tokens, extra = _setup(arch)
+    art = model_artifact(params, cfg.cim)
+    node = art.params
+    for k in node_path:
+        node = node[k]
+    assert node["w_digits"].ndim == 6       # (S, kt, kh, kw, cpa, c_out)
+    assert "/".join(node_path) in art.meta["col_shard"]
