@@ -1,0 +1,148 @@
+"""Hardware-style backend frontier -> bench_backend_frontier.json.
+
+One chart, three hardware styles (DESIGN.md §13), three axes per point:
+
+  cost        analytic bench-ResNet conv sweep (``bench_hw_cost.
+              layer_cost`` at the matching style) — energy / latency /
+              area / conversions
+  accuracy    relative output error vs the fp32 matmul of a calibrated
+              CIM linear layer on a fixed-key workload, served through
+              the style's own packed forward
+  robustness  Monte-Carlo mean relative error under log-normal cell
+              noise (``repro.eval.robustness.monte_carlo_linear_error``
+              — the same harness the variation bench uses), per sigma
+
+Points: ``deploy`` and ``binary`` swept over PSUM_BITS (the ADC
+resolution trade the paper's column-wise s_p exists to win), plus one
+``adc_free`` point (no ADC — psum_bits is inert for accuracy; its cost
+is the digital accumulator at full psum width). The JSON artifact is
+checked in at the repo root: fixed-seed, single-host CPU arithmetic,
+regenerate with
+
+  PYTHONPATH=src python -m benchmarks.bench_backend_frontier [--out PATH]
+
+The ``--smoke`` tier (and ``run.py --smoke``) runs a tiny workload and
+never writes JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.granularity import Granularity as G
+
+from .bench_hw_cost import PSUM_BITS, _bench_conv_layers, layer_cost
+from .common import make_cim
+
+SIGMAS = (0.05, 0.1, 0.2)
+MC_SAMPLES = 8
+
+# the linear accuracy/robustness workload (fixed keys => deterministic)
+K, N, BATCH = 192, 96, 64
+
+
+def _workload(k=K, n=N, m=BATCH):
+    # non-negative activations: the Table II configs are post-ReLU
+    # (act_signed=False), so a zero-mean workload would just measure clip
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 0.5
+    return jax.nn.relu(x)
+
+
+def _style_cfg(style: str, psum_bits: int, *, k=K, n=N):
+    # paper Table II bit widths (3b act / 3b weight, 1b cells); the
+    # binary backend overrides the PLANE geometry itself via plane_bits
+    return make_cim(G.COLUMN, G.COLUMN, psum_bits=psum_bits).replace(
+        mode=style, use_kernel=False)
+
+
+def _point(style: str, psum_bits: int, x, *, n_samples=MC_SAMPLES,
+           sigmas=SIGMAS, k=K, n=N):
+    import repro.api as api
+    cfg = _style_cfg(style, psum_bits, k=k, n=n)
+    params = api.init_linear(jax.random.PRNGKey(1), k, n, cfg)
+    params = api.calibrate_linear(x, params, cfg)
+    packed = api.pack_linear(params, cfg)
+    y = api.linear(x, packed, cfg, compute_dtype=jnp.float32)
+    y_fp = x @ params["w"].astype(jnp.float32)
+    rel_err = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+
+    from repro.eval.robustness import monte_carlo_linear_error
+    mc = monte_carlo_linear_error(packed, cfg, x, key=jax.random.PRNGKey(2),
+                                  sigmas=sigmas, n_samples=n_samples)
+    robust = {f"sigma={s}": float(np.mean(mc[i]))
+              for i, s in enumerate(sigmas)}
+
+    layers = [layer_cost(*spec, cfg, style=style)
+              for spec in _bench_conv_layers()]
+    cost = {kk: sum(L[kk] for L in layers)
+            for kk in ("n_arrays", "cells_used", "conversions", "energy_pj",
+                       "e_adc_pj", "latency_ns", "area_um2")}
+    return {
+        "style": style, "psum_bits": psum_bits,
+        "accuracy": {"rel_err_fp32": rel_err},
+        "robustness": robust,
+        "cost": cost,
+    }
+
+
+def run(csv=None, out=None, *, smoke=False):
+    """Sweep the three styles onto one frontier; smoke = tiny tier."""
+    k, n = (64, 32) if smoke else (K, N)
+    x = _workload(k=k, n=n, m=8 if smoke else BATCH)
+    sigmas = (0.1,) if smoke else SIGMAS
+    n_samples = 2 if smoke else MC_SAMPLES
+    sweep_bits = (4,) if smoke else PSUM_BITS
+
+    points = []
+    for style in ("deploy", "binary"):
+        for pb in sweep_bits:
+            points.append(_point(style, pb, x, n_samples=n_samples,
+                                 sigmas=sigmas, k=k, n=n))
+    # adc_free has no ADC: one point, psum_bits inert for accuracy (the
+    # cost model charges the full-width digital accumulator instead)
+    points.append(_point("adc_free", sweep_bits[-1], x,
+                         n_samples=n_samples, sigmas=sigmas, k=k, n=n))
+
+    report = {}
+    for pt in points:
+        key = f"style={pt['style']},psum_bits={pt['psum_bits']}"
+        report[key] = pt
+        sig = f"sigma={sigmas[len(sigmas) // 2]}"
+        line = (f"backend_frontier,{key},"
+                f"rel_err={pt['accuracy']['rel_err_fp32']:.4f},"
+                f"mc_{sig}={pt['robustness'][sig]:.4f},"
+                f"energy_pj={pt['cost']['energy_pj']:.1f},"
+                f"latency_ns={pt['cost']['latency_ns']:.0f},"
+                f"area_um2={pt['cost']['area_um2']:.0f}")
+        print(line)
+        if csv is not None:
+            csv.append(line)
+    if out:
+        head = {
+            "workload": {"kind": "linear", "k": k, "n": n,
+                         "batch": int(x.shape[0]), "seed": 0},
+            "mc": {"sigmas": list(sigmas), "n_samples": n_samples},
+            "cost_model": "bench_hw_cost.layer_cost over the bench "
+                          "ResNet-20 conv layers",
+        }
+        with open(out, "w") as f:
+            json.dump({"meta": head, "points": report}, f, indent=1)
+        print(f"wrote {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench_backend_frontier.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tier, never writes JSON")
+    args = ap.parse_args(argv)
+    run(out=None if args.smoke else args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

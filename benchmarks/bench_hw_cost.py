@@ -49,6 +49,14 @@ A_CELL = 0.05              # per cell
 ADC_A_LIN = 3.75           # * psum_bits per column
 ADC_A_EXP = 0.25           # * 2^psum_bits per column
 
+# adc_free style (DESIGN.md §13): the per-column SAR ADC is replaced by a
+# digital accumulator at the FULL psum width act_bits + cell_bits +
+# ceil(log2(rows)) — energy/area linear in that width (an adder tree has
+# no 4^b conversion wall), latency a fixed digital-pipeline beat.
+E_ACC_BIT = 0.05e-3        # per accumulation per accumulator bit
+A_ACC_BIT = 0.6            # per column per accumulator bit
+LAT_ACC = 2.0              # ns per output position (pipelined adder tree)
+
 PSUM_BITS = (2, 4, 6, 8)
 
 
@@ -73,10 +81,21 @@ def _bench_conv_layers():
     return layers
 
 
-def layer_cost(name, kh, c_in, c_out, m_out, cim):
-    """Charge one conv layer under the stretched-kernel tiling."""
+def layer_cost(name, kh, c_in, c_out, m_out, cim, style="deploy"):
+    """Charge one conv layer under the stretched-kernel tiling.
+
+    ``style`` selects the hardware style (DESIGN.md §13). ``deploy`` (and
+    ``ref``, same hardware) is the paper's ADC pipeline. ``adc_free``
+    keeps the same tiling but replaces every ADC conversion with a
+    digital accumulation at the full psum width (the ``e_adc_pj`` column
+    then holds accumulator energy — schema unchanged) and drops the
+    per-bit ADC readout serialization from latency. ``binary`` packs S=1
+    sign planes (plane_bits=(1,1)), collapsing cells/arrays/conversions
+    ~n_split-fold, with the standard ADC still charged."""
+    wb, cb = (1, 1) if style == "binary" else (cim.weight_bits,
+                                               cim.cell_bits)
     t, cpa = conv_tiling(kh, kh, c_in, c_out, cim.array_rows, cim.array_cols,
-                         cim.weight_bits, cim.cell_bits)
+                         wb, cb)
     ns, kt, nt = t.n_split, t.k_tiles, t.n_tiles
     n_arrays = kt * nt
     taps = kh * kh
@@ -87,13 +106,20 @@ def layer_cost(name, kh, c_in, c_out, m_out, cim):
 
     e_mac = m_out * cells_used * E_MAC
     e_dac = m_out * c_in * taps * cim.act_bits * E_DAC_BIT
-    e_adc = conversions * (ADC_E_LIN * pb + ADC_E_EXP * 4 ** pb)
+    if style == "adc_free":
+        acc_bits = cim.act_bits + cb + max(1, (t.array_rows - 1).bit_length())
+        e_adc = conversions * E_ACC_BIT * acc_bits
+        latency = m_out * (LAT_ACC + LAT_BASE)
+        col_area = A_ACC_BIT * acc_bits
+    else:
+        e_adc = conversions * (ADC_E_LIN * pb + ADC_E_EXP * 4 ** pb)
+        latency = m_out * (LAT_PER_BIT * pb + LAT_BASE)
+        col_area = ADC_A_LIN * pb + ADC_A_EXP * 2 ** pb
     e_sa = conversions * E_SA
     e_dq = m_out * ns * kt * E_DQ
     energy = e_mac + e_dac + e_adc + e_sa + e_dq
-    latency = m_out * (LAT_PER_BIT * pb + LAT_BASE)
     area = n_arrays * (t.array_rows * t.array_cols * A_CELL
-                       + t.array_cols * (ADC_A_LIN * pb + ADC_A_EXP * 2 ** pb))
+                       + t.array_cols * col_area)
     return {
         "name": name, "kind": "conv",
         "n_split": ns, "k_tiles": kt, "n_tiles": nt, "n_arrays": n_arrays,

@@ -25,11 +25,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     steps = 30 if args.fast else args.steps
 
-    from . import (bench_conv_kernel, bench_dequant_overhead,
-                   bench_drift_recal, bench_granularity, bench_hw_cost,
-                   bench_kernel, bench_lm_cim, bench_psum_range,
-                   bench_qat_stages, bench_serve_load, bench_serve_sharded,
-                   bench_variation)
+    from . import (bench_backend_frontier, bench_conv_kernel,
+                   bench_dequant_overhead, bench_drift_recal,
+                   bench_granularity, bench_hw_cost, bench_kernel,
+                   bench_lm_cim, bench_psum_range, bench_qat_stages,
+                   bench_serve_load, bench_serve_sharded, bench_variation)
 
     csv = []
     t0 = time.time()
@@ -43,6 +43,9 @@ def main(argv=None) -> None:
     # from the module entry point, never from this tier
     bench_serve_load.run(csv=csv, concurrency=(2, 4, 8), batch=2,
                          prompt_len=2, new_tokens=2)
+    # hardware-style frontier at tiny scale — the checked-in JSON comes
+    # from the module entry point, never from this tier (no JSON churn)
+    bench_backend_frontier.run(csv=csv, smoke=True)
     if not args.smoke:
         bench_granularity.run(steps=steps, csv=csv)   # Fig. 7 / Table III
         bench_qat_stages.run(steps=steps, csv=csv)    # Fig. 9

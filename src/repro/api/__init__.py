@@ -21,19 +21,35 @@ as deprecated shims; see the migration table in README.md.
 from repro.core.cim_conv import _calibrate_conv as calibrate_conv
 from repro.core.cim_conv import _conv_forward as conv2d
 from repro.core.cim_conv import _init_conv as init_conv
-from repro.core.cim_conv import _pack_conv as pack_conv
 from repro.core.cim_linear import CIMConfig
 from repro.core.cim_linear import _calibrate_linear as calibrate_linear
 from repro.core.cim_linear import _init_linear as init_linear
 from repro.core.cim_linear import _linear_forward as linear
-from repro.core.cim_linear import _pack_linear as pack_linear
 
 from .artifact import (ARTIFACT_LAYOUT_VERSION, SCALE_DELTA_VERSION,
-                       ArtifactVersionError, DeployArtifact,
+                       ArtifactVersionError, DeployArtifact, _packed_config,
                        col_shard_axes, model_artifact, pack_model)
-from .backends import (Backend, get_backend, is_packed, register_backend,
-                       registered_backends)
+from .backends import (Backend, get_backend, is_packed, packers_for,
+                       register_backend, registered_backends)
 from .handles import QuantConv2d, QuantLinear, Variation
+
+
+def pack_linear(params, cfg, *, variation_key=None, variation_std=None):
+    """Pack trainable linear params with ``cfg``'s backend packer — the
+    standard deploy digit-plane pack unless the backend overrides it
+    (e.g. ``binary``'s S=1 sign-plane pack). Non-packed cfgs (emulate)
+    pack for ``deploy``."""
+    pack_lin, _ = packers_for(_packed_config(cfg))
+    return pack_lin(params, cfg, variation_key=variation_key,
+                    variation_std=variation_std)
+
+
+def pack_conv(params, cfg, *, variation_key=None, variation_std=None):
+    """Conv counterpart of ``pack_linear`` (backend-resolved packer)."""
+    _, pack_cv = packers_for(_packed_config(cfg))
+    return pack_cv(params, cfg, variation_key=variation_key,
+                   variation_std=variation_std)
+
 
 __all__ = [
     "ARTIFACT_LAYOUT_VERSION", "ArtifactVersionError", "Backend", "CIMConfig",
@@ -41,6 +57,6 @@ __all__ = [
     "QuantConv2d", "QuantLinear", "Variation", "calibrate_conv",
     "calibrate_linear", "col_shard_axes", "conv2d", "get_backend",
     "init_conv", "init_linear", "is_packed", "linear", "model_artifact",
-    "pack_conv", "pack_linear", "pack_model", "register_backend",
-    "registered_backends",
+    "pack_conv", "pack_linear", "pack_model", "packers_for",
+    "register_backend", "registered_backends",
 ]

@@ -34,13 +34,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import ckpt as _ckpt
-from repro.core.cim_conv import _pack_conv
-from repro.core.cim_linear import CIMConfig, _pack_linear
+from repro.core.cim_linear import CIMConfig
 from repro.core.variation import path_fold_key
 
 # Layout 2 adds the optional per-node ``deq_scale`` leaf (in-service
-# recalibration, eval/recalibrate.py); readers of 2 still read 1.
-ARTIFACT_LAYOUT_VERSION = 2
+# recalibration, eval/recalibrate.py); layout 3 stamps the packing
+# backend (``head["backend"]`` == config.mode, DESIGN.md §13) so tools
+# can see which hardware style an artifact targets from artifact.json
+# alone. Readers of 3 still read 1 and 2.
+ARTIFACT_LAYOUT_VERSION = 3
 
 # Version of the ScaleDelta side-artifact format (eval/recalibrate.py).
 # Stamped into a delta at fit time and into ``artifact.meta`` at apply
@@ -49,7 +51,8 @@ SCALE_DELTA_VERSION = 1
 
 # Which PR introduced each on-disk format version — named in version-
 # mismatch errors so "which side is stale" is answerable from the message.
-_LAYOUT_WRITERS = {1: "PR 3 (lifecycle API)", 2: "PR 6 (self-healing serving)"}
+_LAYOUT_WRITERS = {1: "PR 3 (lifecycle API)", 2: "PR 6 (self-healing serving)",
+                   3: "PR 9 (hardware-style backends)"}
 _DELTA_WRITERS = {1: "PR 6 (self-healing serving)"}
 
 _KINDS = ("linear", "conv", "model")
@@ -135,6 +138,10 @@ class DeployArtifact:
             "format": "repro.api.DeployArtifact",
             "layout_version": self.layout_version,
             "kind": self.kind,
+            # which hardware-style backend the pack targets (== config
+            # mode; layout >= 3) — surfaced in the header so placement/
+            # fleet tools can route without opening the leaf store
+            "backend": self.config.mode,
             "config": dataclasses.asdict(self.config),
             "meta": self.meta,
         }
@@ -175,7 +182,19 @@ class DeployArtifact:
                 SCALE_DELTA_VERSION, writers=_DELTA_WRITERS,
                 detail="Upgrade the repro library or re-fit the ScaleDelta "
                        "with eval/recalibrate.py.")
-        cfg = CIMConfig(**head["config"])
+        try:
+            cfg = CIMConfig(**head["config"])
+        except ValueError as e:
+            if "unknown CIM mode" not in str(e):
+                raise
+            from .backends import registered_backends
+            backend = head.get("backend", head["config"].get("mode"))
+            raise ValueError(
+                f"artifact at {path} was packed for backend {backend!r}, "
+                f"which is not registered in this session (registered: "
+                f"{registered_backends()}). Import or register_backend() "
+                f"the backend that owns this hardware style before "
+                f"loading.") from None
         params = _ckpt.restore_tree(path, step=0)
         if mesh is None:
             params = jax.tree.map(jnp.asarray, params)
@@ -248,21 +267,26 @@ def _bank_names(node: Dict) -> list:
             and all(f"{nm}_{s}" in node for s in _BANK_SCALES)]
 
 
-def _pack_bank(node: Dict, nm: str, cfg: CIMConfig, vkey, variation_std):
-    """Pack one expert bank: vmap ``_pack_linear`` over the flattened
-    leading (layer-stack x expert) axes, then restore them. Outputs keep
-    the flat-key convention (``nm_digits``/``nm_s_w``/... ) so router and
-    shared-expert siblings stay untouched in the same node."""
+def _pack_bank(node: Dict, nm: str, cfg: CIMConfig, vkey, variation_std,
+               pack_lin=None):
+    """Pack one expert bank: vmap the backend's linear packer over the
+    flattened leading (layer-stack x expert) axes, then restore them.
+    Outputs keep the flat-key convention (``nm_digits``/``nm_s_w``/... )
+    so router and shared-expert siblings stay untouched in the same
+    node."""
+    if pack_lin is None:
+        from .backends import packers_for
+        pack_lin, _ = packers_for(cfg)
     bank = {"w": jnp.asarray(node[nm]).astype(jnp.float32),
             **{s: node[f"{nm}_{s}"] for s in _BANK_SCALES}}
     lead = bank["w"].shape[:-2]
     nl = len(lead)
     flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[nl:]), bank)
     if vkey is None:
-        packed = jax.vmap(lambda p: _pack_linear(p, cfg))(flat)
+        packed = jax.vmap(lambda p: pack_lin(p, cfg))(flat)
     else:
         keys = jax.random.split(vkey, flat["w"].shape[0])
-        packed = jax.vmap(lambda p, k: _pack_linear(
+        packed = jax.vmap(lambda p, k: pack_lin(
             p, cfg, variation_key=k,
             variation_std=variation_std))(flat, keys)
     packed = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]), packed)
@@ -289,7 +313,14 @@ def pack_model(params: Dict, cfg: CIMConfig, *,
 
     ``variation_key``/``variation_std`` bake ONE device realization into
     the planes, with an independent per-layer key folded from the tree
-    path (deterministic across processes)."""
+    path (deterministic across processes).
+
+    The packers are the BACKEND's (``backends.packers_for``): a cfg on a
+    hardware style with its own pack path (e.g. ``binary``'s sign-plane
+    pack) walks the same tree into that style's plane format."""
+    from .backends import packers_for
+    pack_lin, pack_cv = packers_for(_packed_config(cfg))
+
     def walk(node, path):
         if _is_cim_layer(node):
             w = node["w"]
@@ -301,11 +332,11 @@ def pack_model(params: Dict, cfg: CIMConfig, *,
             extras = {k: v for k, v in node.items()
                       if k not in _CIM_LAYER_KEYS}
             if w.ndim == 2:
-                return {**extras, **_pack_linear(layer, cfg, **kw)}
+                return {**extras, **pack_lin(layer, cfg, **kw)}
             if w.ndim == 4:
-                return {**extras, **_pack_conv(layer, cfg, **kw)}
+                return {**extras, **pack_cv(layer, cfg, **kw)}
             if w.ndim in (3, 5):
-                pack = _pack_linear if w.ndim == 3 else _pack_conv
+                pack = pack_lin if w.ndim == 3 else pack_cv
                 if vkey is None:
                     packed = jax.vmap(lambda p: pack(p, cfg))(layer)
                 else:
@@ -324,7 +355,8 @@ def pack_model(params: Dict, cfg: CIMConfig, *,
                 for nm in banks:
                     vkey = (None if variation_key is None
                             else _path_key(variation_key, path + (nm,)))
-                    out.update(_pack_bank(node, nm, cfg, vkey, variation_std))
+                    out.update(_pack_bank(node, nm, cfg, vkey, variation_std,
+                                          pack_lin=pack_lin))
                     consumed |= {nm, *(f"{nm}_{s}" for s in _BANK_SCALES)}
                 # siblings (router, shared experts, ...) walk as usual
                 for k, v in node.items():

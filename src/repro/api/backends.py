@@ -35,7 +35,7 @@ uniform:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import sys
 
@@ -57,6 +57,23 @@ class Backend:
     planes, ``w_digits``); ``packed=False`` backends consume the trainable
     float-weight params (``w``). ``repro.nn.linear.linear_specs`` and
     ``models.layers.conv_specs`` key their parameter layout off this flag.
+
+    Hardware-style backends (DESIGN.md §13) may additionally own their
+    packing and plane geometry:
+
+    ``pack_linear``/``pack_conv`` convert trainable float params into this
+    backend's packed form — same signatures as the core packers
+    (``(params, cfg, *, variation_key, variation_std) -> packed``). When
+    ``None`` (the default), the backend consumes the standard deploy pack
+    (``core.cim_linear._pack_linear`` / ``core.cim_conv._pack_conv``);
+    ``repro.api.pack_model``/``pack_linear``/``pack_conv`` and the handle
+    ``.pack()`` methods all resolve through ``packers_for``.
+
+    ``plane_bits`` overrides the (weight_bits, cell_bits) pair that
+    determines the PACKED digit-plane geometry — e.g. the ``binary``
+    style packs S=1 sign planes (plane_bits=(1, 1)) regardless of the
+    config's training-time weight_bits. ``plane_tiling``/``conv_plane_
+    tiling`` below resolve the packed geometry for spec construction.
     """
 
     name: str
@@ -65,16 +82,23 @@ class Backend:
                             #  compute_dtype)
     packed: bool
     description: str = ""
+    pack_linear: Optional[Callable] = None
+    pack_conv: Optional[Callable] = None
+    plane_bits: Optional[Tuple[int, int]] = None
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
-def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
-    """Register a backend; its name becomes a valid ``CIMConfig.mode``."""
-    if not overwrite and backend.name in _REGISTRY:
+def register_backend(backend: Backend, *, replace: bool = False) -> Backend:
+    """Register a backend; its name becomes a valid ``CIMConfig.mode``.
+
+    Name collisions raise unless ``replace=True`` — silently shadowing a
+    built-in (or any registered) backend would reroute every dispatch
+    site in the process."""
+    if not replace and backend.name in _REGISTRY:
         raise ValueError(f"backend {backend.name!r} is already registered; "
-                         "pass overwrite=True to replace it")
+                         "pass replace=True to replace it")
     _REGISTRY[backend.name] = backend
     _lin._KNOWN_MODES.add(backend.name)
     return backend
@@ -99,6 +123,44 @@ def is_packed(cfg) -> bool:
     if cfg is None or not cfg.enabled:
         return False
     return get_backend(cfg.mode).packed
+
+
+def packers_for(cfg) -> Tuple[Callable, Callable]:
+    """(pack_linear, pack_conv) for ``cfg``'s backend — the standard
+    deploy packers unless the backend overrides them (e.g. ``binary``'s
+    sign-plane pack). Every generic pack entry point (``pack_model``,
+    handle ``.pack()``, ``repro.api.pack_linear``/``pack_conv``) resolves
+    here so a ``cfg.replace(mode="binary")`` re-pack Just Works."""
+    b = get_backend(cfg.mode)
+    return (b.pack_linear or _lin._pack_linear,
+            b.pack_conv or _conv._pack_conv)
+
+
+def plane_bits(cfg) -> Tuple[int, int]:
+    """(weight_bits, cell_bits) governing ``cfg``'s PACKED digit-plane
+    geometry — the backend's ``plane_bits`` override when set (binary:
+    (1, 1) sign planes), else the config's own bits."""
+    b = get_backend(cfg.mode)
+    return b.plane_bits or (cfg.weight_bits, cfg.cell_bits)
+
+
+def plane_tiling(cfg, k: int, n: int):
+    """ArrayTiling of ``cfg``'s packed linear digit planes. Differs from
+    ``cfg.tiling`` exactly when the backend overrides ``plane_bits``."""
+    from repro.core.granularity import ArrayTiling
+    wb, cb = plane_bits(cfg)
+    return ArrayTiling(k=k, n=n, array_rows=cfg.array_rows,
+                       array_cols=cfg.array_cols,
+                       weight_bits=wb, cell_bits=cb)
+
+
+def conv_plane_tiling(cfg, kh: int, kw: int, c_in: int, c_out: int):
+    """(ArrayTiling, c_per_array) of ``cfg``'s packed conv digit planes
+    under the stretched-kernel rule, honoring backend ``plane_bits``."""
+    from repro.core.granularity import conv_tiling
+    wb, cb = plane_bits(cfg)
+    return conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
+                       wb, cb)
 
 
 # ---------------------------------------------------------------------------
@@ -147,3 +209,10 @@ register_backend(Backend(
     packed=True,
     description="packed int digit planes on the jnp oracle (kernel "
                 "arbitration reference)"))
+
+
+# Hardware-style backends (adc_free, binary — DESIGN.md §13) live in
+# ``repro.backends``; imported last so their ``register_backend`` calls
+# find Backend/register_backend already defined on this partially-
+# initialized module (import-cycle safe).
+import repro.backends  # noqa: E402,F401  (registers adc_free, binary)

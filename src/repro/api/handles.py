@@ -23,12 +23,12 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.cim_conv import (_calibrate_conv, _conv_forward, _init_conv,
-                                 _pack_conv)
+from repro.core.cim_conv import _calibrate_conv, _conv_forward, _init_conv
 from repro.core.cim_linear import (CIMConfig, _calibrate_linear, _init_linear,
-                                   _linear_forward, _pack_linear)
+                                   _linear_forward)
 
 from .artifact import DeployArtifact, _packed_config
+from .backends import packers_for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,8 +127,9 @@ class QuantLinear(_Handle):
     def pack(self, *, variation: Optional[Variation] = None,
              meta: Optional[Dict] = None) -> DeployArtifact:
         vkey, vstd = _vkv(variation)
-        packed = _pack_linear(self._require_trainable("pack"), self.cfg,
-                              variation_key=vkey, variation_std=vstd)
+        pack_lin, _ = packers_for(_packed_config(self.cfg))
+        packed = pack_lin(self._require_trainable("pack"), self.cfg,
+                          variation_key=vkey, variation_std=vstd)
         # col_shard: the planes' output-column (N) axis is the unit of
         # independence column-parallel serving shards over (DESIGN.md §10)
         m = {"k": self.k, "n": self.n, **(meta or {}),
@@ -181,8 +182,9 @@ class QuantConv2d(_Handle):
     def pack(self, *, variation: Optional[Variation] = None,
              meta: Optional[Dict] = None) -> DeployArtifact:
         vkey, vstd = _vkv(variation)
-        packed = _pack_conv(self._require_trainable("pack"), self.cfg,
-                            variation_key=vkey, variation_std=vstd)
+        _, pack_cv = packers_for(_packed_config(self.cfg))
+        packed = pack_cv(self._require_trainable("pack"), self.cfg,
+                         variation_key=vkey, variation_std=vstd)
         m = {"kh": self.kh, "kw": self.kw, "c_in": self.c_in,
              "c_out": self.c_out, "stride": self.stride,
              "padding": self.padding, **(meta or {}),

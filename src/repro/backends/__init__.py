@@ -1,0 +1,36 @@
+"""Alternative CIM hardware styles as first-class backends (DESIGN.md §13).
+
+Each module here registers one hardware style with the
+``repro.api.backends`` registry at import time, making its name a valid
+``CIMConfig.mode`` sharing the whole quantize→calibrate→pack→
+``DeployArtifact``→serve lifecycle with the paper-faithful ``deploy``
+style:
+
+  adc_free  HCiM-style hybrid analog-digital CIM: bit-sliced partial
+            sums leave the array exact and are accumulated digitally —
+            no per-column ADC, no psum quantization error, ADC energy/
+            area replaced by a digital accumulator in the cost model.
+  binary    binary-weight (BWN-style) CIM: S=1 sign planes with a
+            per-(array-tile, column) alpha scale and multi-bit
+            activations — n_split collapses to 1, so cells, arrays and
+            ADC conversions all drop ~n_split-fold.
+
+This package is imported by ``repro.api.backends`` itself (bottom of the
+module), so the styles are registered whenever the public API is — a
+``CIMConfig(mode="adc_free")`` is constructible as soon as ``repro.api``
+is imported. The frontier across all three styles is swept by
+``benchmarks/bench_backend_frontier.py``.
+"""
+from __future__ import annotations
+
+from .adc_free import ADC_FREE
+from .binary import (BINARY, binary_calibrate_psum_scale, pack_conv_binary,
+                     pack_linear_binary)
+
+__all__ = [
+    "ADC_FREE",
+    "BINARY",
+    "binary_calibrate_psum_scale",
+    "pack_conv_binary",
+    "pack_linear_binary",
+]

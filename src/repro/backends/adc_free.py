@@ -1,0 +1,55 @@
+"""The ``adc_free`` hardware style: digital accumulation, no ADC.
+
+HCiM-style hybrid analog-digital CIM (PAPERS.md) reads each bit-sliced
+column MAC out of the array exactly and accumulates the partial sums in a
+digital adder tree, so the per-(split, array, column) ADC — and with it
+the psum quantization error the paper's column-wise s_p exists to tame —
+disappears. What changes versus ``deploy``:
+
+* **Arithmetic**: partial sums are never quantized; ``cfg.psum_bits`` /
+  ``cfg.psum_quant`` / the packed ``s_p`` scales are carried but inert
+  (s_p stays in the artifact so the same pack serves on either style).
+  Numerically this backend equals ``emulate`` with ``psum_quant=False``
+  and ``deploy`` whose ADC is transparent (s_p=1, wide psum_bits) —
+  tests/test_backends.py pins both identities.
+* **Kernel**: ``kernels/cim_adc_free.cim_matmul_adc_free_pallas`` — the
+  deploy grid minus the VMEM ADC stage and minus the s_p operand stream.
+* **Cost** (benchmarks/bench_hw_cost.layer_cost(style="adc_free")): the
+  exponential-in-psum_bits ADC energy/area term is replaced by a linear
+  digital-accumulator term at the full accumulation width
+  ``act_bits + cell_bits + ceil(log2(rows))``.
+
+Packing, artifact layout, column sharding and variation injection are
+untouched: this style consumes the standard deploy pack (same
+``w_digits``/``s_w``/``s_p``/``s_a`` tree), so one artifact serves on
+``deploy``, ``ref`` *and* ``adc_free``, and emulate/deploy-grade
+bit-exactness of `perturb_packed` noise carries over unchanged.
+"""
+from __future__ import annotations
+
+from repro.api.backends import Backend, register_backend
+from repro.core.cim_conv import _forward_conv_deploy
+from repro.core.cim_linear import _forward_deploy
+
+
+def _linear_adc_free(x, params, cfg, vkey, sigma, compute_dtype):
+    return _forward_deploy(x, params, cfg, vkey, sigma, compute_dtype,
+                           adc_free=True)
+
+
+def _conv_adc_free(x, params, cfg, stride, padding, vkey, sigma,
+                   compute_dtype):
+    return _forward_conv_deploy(x, params, cfg, stride, padding, vkey,
+                                sigma, compute_dtype, adc_free=True)
+
+
+ADC_FREE = Backend(
+    name="adc_free",
+    linear=_linear_adc_free,
+    conv=_conv_adc_free,
+    packed=True,
+    description="HCiM-style ADC-free CIM: exact digital accumulation of "
+                "bit-sliced partial sums (no psum quantization); consumes "
+                "the standard deploy pack")
+
+register_backend(ADC_FREE)

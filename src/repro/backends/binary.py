@@ -1,0 +1,244 @@
+"""The ``binary`` hardware style: S=1 sign planes, multi-bit activations.
+
+Binary-weight CIM (BWN-style, PAPERS.md) stores each weight as a single
+±1 cell with a small per-group real scale α, while activations stay
+multi-bit. In the packed digit-plane picture the whole bit-split axis
+collapses: ``n_split = 1``, so a weight occupies ONE physical column
+instead of ``ceil(weight_bits / cell_bits)`` — cells, arrays and ADC
+conversions all drop ~n_split-fold (the cost model's style="binary"
+tiling), and there is no shift-and-add stage (place value 2^0 alone).
+
+Pack path (this module, resolved through ``Backend.pack_linear``/
+``pack_conv`` via ``repro.api.backends.packers_for``):
+
+* digits — ``sign(w)`` as a single (1, k_tiles, rows, N) plane (conv:
+  (1, kt, kh, kw, cpa, C_out) in the stretched-kernel layout). Padded
+  rows/channels store digit 0 (dead cells), exactly like the deploy pack.
+* ``s_w`` — the BWN α, per (array-tile, column): mean |w| over the
+  tile's real rows, stored at full column granularity (kt, N). The
+  fused dequant is ``deq = α · s_a`` — same contract as deploy's
+  ``2^{cs} · s_w · s_a`` with places = [1].
+* ``s_p`` — full-shape (1, kt, N) ADC scales, initialized analytically
+  (``_init_linear``'s magnitude model at cell_bits=1); refine with
+  ``binary_calibrate_psum_scale`` on a data batch. The ADC stage itself
+  is unchanged — binary arrays still digitize column psums at
+  ``cfg.psum_bits`` — so the column-wise s_p story the paper tells
+  applies to this style too.
+
+The forward rides the UNCHANGED deploy machinery: ``kernels/ops``
+dispatch (Pallas kernel / jnp oracle / column-sharded shard_map),
+``perturb_packed`` variation on the S=1 planes, ``DeployArtifact``
+round-trip and ``ScaleDelta`` recalibration (``deq_scale``) all work
+as-is because only the plane geometry differs — which is what
+``Backend.plane_bits = (1, 1)`` declares to spec builders.
+
+Binarization is a real approximation (≈13% weight MSE for Gaussian
+weights), so unlike adc_free this style trades accuracy for cost — the
+point of charting all three on one frontier
+(benchmarks/bench_backend_frontier.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.backends import (Backend, conv_plane_tiling, plane_tiling,
+                                register_backend)
+from repro.core.cim_linear import (CIMConfig, _tile_inputs, deploy_act_codes)
+from repro.core.quantizer import qrange
+from repro.core.variation import perturb_packed, variation_wanted
+
+
+def _store_dtype(cfg: CIMConfig):
+    # sign digits are {-1, 0, +1}: always fit int4 when requested
+    return jnp.int4 if cfg.pack_dtype == "int4" else jnp.int8
+
+
+def _analytic_s_p(t, cfg: CIMConfig, shape):
+    """|P| ~ sqrt(rows)·E|a_int|·E|digit| with 1-bit cells (E|digit| ≈ 1/2
+    of the 2^(cell_bits-1) digit range) — ``_init_linear``'s magnitude
+    model evaluated at cell_bits=1."""
+    _, qp_p = qrange(cfg.psum_bits, True)
+    p_mag = jnp.sqrt(float(t.array_rows)) * (2 ** (cfg.act_bits - 2)) / 2.0
+    return jnp.full(shape, 2.0 * p_mag / jnp.sqrt(float(max(qp_p, 1))),
+                    jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+def pack_linear_binary(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
+                       variation_key: Optional[jax.Array] = None,
+                       variation_std=None) -> Dict[str, jnp.ndarray]:
+    """Binarize trained float params into the S=1 packed form.
+
+    Consumes the same trainable quartet the deploy packer does ({w, s_w,
+    s_p, s_a}); the multi-bit s_w/s_p are discarded — α and the binary
+    s_p replace them (s_a carries over, so calibrate on emulate first)."""
+    w = params["w"].astype(jnp.float32)
+    k, n = w.shape
+    t = plane_tiling(cfg, k, n)                       # weight_bits=cell_bits=1
+    pad_k = t.k_padded - k
+    sign = jnp.where(w >= 0, 1.0, -1.0)
+    sign = jnp.pad(sign, ((0, pad_k), (0, 0)))        # dead rows: digit 0
+    digits = sign.reshape(t.k_tiles, t.array_rows, n)[None]   # (1,kt,r,N)
+    # BWN alpha per (array tile, column): mean |w| over the tile's REAL rows
+    w_abs = jnp.abs(jnp.pad(w, ((0, pad_k), (0, 0))))
+    w_t = w_abs.reshape(t.k_tiles, t.array_rows, n)
+    rows = jnp.minimum(
+        jnp.full((t.k_tiles,), t.array_rows),
+        k - jnp.arange(t.k_tiles) * t.array_rows).astype(jnp.float32)
+    alpha = w_t.sum(axis=1) / rows[:, None]           # (kt, n)
+    out = {
+        "w_digits": digits.astype(_store_dtype(cfg)),
+        "s_w": alpha.astype(jnp.float32) + 1e-9,
+        "s_p": _analytic_s_p(t, cfg, (1, t.k_tiles, n)),
+        "s_a": params["s_a"],
+        "k_logical": jnp.asarray(k, jnp.int32),
+    }
+    if variation_wanted(variation_key, variation_std):
+        out = perturb_packed(out, variation_key, variation_std)
+    return out
+
+
+def pack_conv_binary(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
+                     variation_key: Optional[jax.Array] = None,
+                     variation_std=None) -> Dict[str, jnp.ndarray]:
+    """Binarize a trained HWIO conv into the S=1 stretched-kernel form
+    (1, k_tiles, kh, kw, c_per_array, C_out) — layout-identical to the
+    deploy conv pack at n_split=1, so the fused conv kernel, column
+    sharding and 6-D variation noise consume it unchanged."""
+    w = params["w"].astype(jnp.float32)
+    kh, kw, c_in, c_out = w.shape
+    t, cpa = conv_plane_tiling(cfg, kh, kw, c_in, c_out)
+    c_pad = t.k_tiles * cpa - c_in
+    sign = jnp.where(w >= 0, 1.0, -1.0)
+    sign = jnp.pad(sign, ((0, 0), (0, 0), (0, c_pad), (0, 0)))
+    d = sign.reshape(kh, kw, t.k_tiles, cpa, c_out)
+    d = jnp.transpose(d, (2, 0, 1, 3, 4))[None]       # (1,kt,kh,kw,cpa,co)
+    # alpha per (channel-slice array, column): mean |w| over the slice's
+    # real channels x all taps
+    w_abs = jnp.pad(jnp.abs(w), ((0, 0), (0, 0), (0, c_pad), (0, 0)))
+    w_t = w_abs.reshape(kh, kw, t.k_tiles, cpa, c_out)
+    ch = jnp.minimum(jnp.full((t.k_tiles,), cpa),
+                     c_in - jnp.arange(t.k_tiles) * cpa).astype(jnp.float32)
+    alpha = w_t.sum(axis=(0, 1, 3)) / (ch[:, None] * kh * kw)  # (kt, co)
+    out = {
+        "w_digits": d.astype(_store_dtype(cfg)),
+        "s_w": alpha.astype(jnp.float32) + 1e-9,
+        "s_p": _analytic_s_p(t, cfg, (1, t.k_tiles, c_out)),
+        "s_a": params["s_a"],
+    }
+    if variation_wanted(variation_key, variation_std):
+        out = perturb_packed(out, variation_key, variation_std)
+    return out
+
+
+def binary_calibrate_psum_scale(packed: Dict[str, jnp.ndarray],
+                                cfg: CIMConfig,
+                                x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Data-driven s_p refinement for a PACKED binary linear layer: the
+    LSQ-style 2·E|P|/sqrt(q_p) init evaluated on the actual sign-plane
+    psums of a calibration batch (the packed analogue of
+    ``_calibrate_linear``, which needs trainable float params)."""
+    digits = packed["w_digits"].astype(jnp.float32)   # (1, kt, rows, N)
+    t = plane_tiling(cfg, int(x.shape[-1]), int(digits.shape[-1]))
+    a_int = deploy_act_codes(x, packed["s_a"], cfg).astype(jnp.float32)
+    a_t = _tile_inputs(a_int, t)
+    flat = a_t.reshape((-1,) + a_t.shape[-2:])        # (B*, kt, rows)
+    psum = jnp.einsum("mtr,strn->mstn", flat, digits,
+                      preferred_element_type=jnp.float32)
+    mean_abs = jnp.mean(jnp.abs(psum), axis=0)        # (1, kt, N)
+    _, qp_p = qrange(cfg.psum_bits, True)
+    s_p = (2.0 * mean_abs / jnp.sqrt(float(max(qp_p, 1)))
+           ).astype(jnp.float32) + 1e-9
+    return {**packed, "s_p": s_p}
+
+
+# ---------------------------------------------------------------------------
+# forwards
+# ---------------------------------------------------------------------------
+
+def _linear_binary(x, params, cfg, vkey, sigma, compute_dtype):
+    from repro.kernels import ops as kops  # lazy: avoids import cycle
+    from repro.nn.module import current_mesh
+
+    digits = params["w_digits"]                       # (1, kt, rows, N)
+    if not variation_wanted(vkey, sigma):
+        vkey = sigma = None
+    s_a = params["s_a"]
+    a_int = deploy_act_codes(x, s_a, cfg)
+    t = plane_tiling(cfg, x.shape[-1], digits.shape[-1])
+    assert t.k_tiles == digits.shape[1] and t.array_rows == digits.shape[2], \
+        (t.k_tiles, t.array_rows, digits.shape)
+    a_t = _tile_inputs(a_int, t)
+
+    s_p = t.broadcast_psum_scale(params["s_p"])       # (1, kt, N)
+    alpha = t.broadcast_weight_scale(params["s_w"])   # (kt, N)
+    deq = alpha[None] * jnp.maximum(s_a, 1e-9)        # place value 2^0 = 1
+    if "deq_scale" in params:
+        deq = deq * params["deq_scale"]
+
+    y = kops.cim_matmul(
+        a_t, digits, s_p, deq,
+        psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
+        use_kernel=cfg.use_kernel,
+        variation_key=vkey, variation_std=sigma,
+        mesh=current_mesh(),
+    )
+    return y.astype(compute_dtype)
+
+
+def _conv_binary(x, params, cfg, stride, padding, vkey, sigma,
+                 compute_dtype):
+    from repro.kernels import ops as kops  # lazy: avoids import cycle
+    from repro.nn.module import current_mesh
+
+    d6 = params["w_digits"]              # (1, kt, kh, kw, cpa, C_out)
+    s1, k_tiles, kh, kw, cpa, c_out = d6.shape
+    digits = d6.reshape(s1, k_tiles, kh * kw * cpa, c_out)
+    if not variation_wanted(vkey, sigma):
+        vkey = sigma = None
+    s_a = params["s_a"]
+    a_int = deploy_act_codes(x, s_a, cfg)
+
+    t, cpa2 = conv_plane_tiling(cfg, kh, kw, x.shape[-1], c_out)
+    assert (t.k_tiles, cpa2) == (k_tiles, cpa), (
+        f"packed binary conv planes {d6.shape} were built for a different "
+        f"geometry than x/cfg imply: expected (k_tiles, c_per_array)="
+        f"{(t.k_tiles, cpa2)}, packed {(k_tiles, cpa)}")
+
+    s_p = t.broadcast_psum_scale(params["s_p"])       # (1, kt, co)
+    alpha = t.broadcast_weight_scale(params["s_w"])   # (kt, co)
+    deq = alpha[None] * jnp.maximum(s_a, 1e-9)
+    if "deq_scale" in params:
+        deq = deq * params["deq_scale"]
+
+    y = kops.cim_conv(
+        a_int, digits, s_p, deq,
+        kh=kh, kw=kw, stride=stride, padding=padding,
+        c_per_array=cpa,
+        psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
+        use_kernel=cfg.use_kernel,
+        variation_key=vkey, variation_std=sigma,
+        mesh=current_mesh(),
+    )
+    return y.astype(compute_dtype)
+
+
+BINARY = Backend(
+    name="binary",
+    linear=_linear_binary,
+    conv=_conv_binary,
+    packed=True,
+    description="binary-weight CIM: S=1 sign planes with per-column BWN "
+                "alpha scales and multi-bit activations (n_split-fold "
+                "fewer cells/arrays/conversions)",
+    pack_linear=pack_linear_binary,
+    pack_conv=pack_conv_binary,
+    plane_bits=(1, 1))
+
+register_backend(BINARY)

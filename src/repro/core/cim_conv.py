@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.obs import adc as obs_adc
 
 from .bitsplit import place_values, split_digits
-from .cim_linear import CIMConfig, _deprecated, _quantize_act
+from .cim_linear import CIMConfig, _deprecated, _quantize_act, deploy_act_codes
 from .granularity import Granularity, conv_tiling
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
 from .variation import perturb_packed, variation_noise, variation_wanted
@@ -220,7 +220,8 @@ def _forward_conv_emulate(x, params, cfg, stride, padding, variation_key,
 
 
 def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
-                         variation_key, sigma, compute_dtype):
+                         variation_key, sigma, compute_dtype,
+                         adc_free: bool = False):
     """Inference from packed conv digit planes (see ``_pack_conv``).
 
     The conv geometry (kh, kw, c_per_array) is carried statically by the
@@ -244,14 +245,7 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
         variation_key = sigma = None
 
     s_a = params["s_a"]
-    qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
-    a_int = jnp.clip(jnp.round(x.astype(jnp.float32) /
-                               jnp.maximum(s_a, 1e-9)), qn_a, qp_a)
-    if qn_a >= -128 and qp_a <= 127:
-        # integer codes fit int8: HBM traffic drops to 1 byte/activation
-        a_int = a_int.astype(jnp.int8)
-    elif qn_a >= 0 and qp_a <= 255:
-        a_int = a_int.astype(jnp.uint8)   # unsigned 8-bit (post-ReLU) codes
+    a_int = deploy_act_codes(x, s_a, cfg)
 
     # logical geometry from the activation; must match the packed planes
     c_in = x.shape[-1]
@@ -278,7 +272,7 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
         psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
         use_kernel=cfg.use_kernel,
         variation_key=variation_key, variation_std=sigma,
-        mesh=current_mesh(),
+        mesh=current_mesh(), adc_free=adc_free,
     )
     return y.astype(compute_dtype)
 

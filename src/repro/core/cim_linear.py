@@ -213,6 +213,24 @@ def _quantize_act(x, params, cfg: CIMConfig):
     return a_hat / jnp.maximum(s_a, 1e-9), s_a
 
 
+def deploy_act_codes(x, s_a, cfg: CIMConfig) -> jnp.ndarray:
+    """Integer activation codes for the packed inference paths.
+
+    Shared by every packed backend (deploy/ref/adc_free/binary): clip-round
+    x to the act_bits grid and narrow to the smallest integer dtype so HBM
+    traffic drops to 1 byte/activation (the byte width
+    bench_kernel.traffic_model charges)."""
+    qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
+    a_int = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / jnp.maximum(s_a, 1e-9)),
+        qn_a, qp_a)
+    if qn_a >= -128 and qp_a <= 127:
+        a_int = a_int.astype(jnp.int8)
+    elif qn_a >= 0 and qp_a <= 255:
+        a_int = a_int.astype(jnp.uint8)   # unsigned 8-bit (post-ReLU) codes
+    return a_int
+
+
 def _tile_inputs(a_int: jnp.ndarray, t: ArrayTiling) -> jnp.ndarray:
     """(..., K) -> (..., k_tiles, rows) with zero padding."""
     pad = t.k_padded - a_int.shape[-1]
@@ -307,7 +325,8 @@ def _forward_emulate(x, params, cfg, variation_key, sigma, compute_dtype):
     return y.astype(compute_dtype)
 
 
-def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
+def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype,
+                    adc_free: bool = False):
     """Inference from packed int digit planes (see ``_pack_linear``). Cell
     noise is injected by the kernel wrapper on the packed planes — the
     int planes themselves are never re-packed per sample.
@@ -316,7 +335,11 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
     (``repro.nn.module.set_activation_rules(rules, mesh)`` — the serving
     engine and launchers do this), the digit planes run column-sharded
     over that axis: each device evaluates its own output-column shard and
-    one all-gather merges the dequantized activations (DESIGN.md §10)."""
+    one all-gather merges the dequantized activations (DESIGN.md §10).
+
+    ``adc_free=True`` dispatches the same packed planes onto the ADC-free
+    hardware style (DESIGN.md §13): digital psum accumulation, no ADC
+    quantization — the ``adc_free`` backend registration wraps this."""
     from repro.kernels import ops as kops  # lazy: avoids import cycle
     from repro.nn.module import current_mesh
 
@@ -325,15 +348,7 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
         variation_key = sigma = None
 
     s_a = params["s_a"]
-    qn_a, qp_a = qrange(cfg.act_bits, cfg.act_signed)
-    a_int = jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(s_a, 1e-9)),
-                     qn_a, qp_a)
-    if qn_a >= -128 and qp_a <= 127:
-        # integer codes fit int8: HBM traffic drops to 1 byte/activation
-        # (the byte width bench_kernel.traffic_model charges)
-        a_int = a_int.astype(jnp.int8)
-    elif qn_a >= 0 and qp_a <= 255:
-        a_int = a_int.astype(jnp.uint8)   # unsigned 8-bit (post-ReLU) codes
+    a_int = deploy_act_codes(x, s_a, cfg)
     # logical K from the activation; tiling geometry from the digit planes
     t = cfg.tiling(x.shape[-1], digits.shape[-1])
     assert t.k_tiles == digits.shape[1] and t.array_rows == digits.shape[2], \
@@ -354,7 +369,7 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype):
         psum_bits=cfg.psum_bits, psum_quant=cfg.psum_quant,
         use_kernel=cfg.use_kernel,
         variation_key=variation_key, variation_std=sigma,
-        mesh=current_mesh(),
+        mesh=current_mesh(), adc_free=adc_free,
     )
     return y.astype(compute_dtype)
 

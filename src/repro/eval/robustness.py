@@ -88,8 +88,14 @@ def monte_carlo_linear_error(
     """Relative deploy-output error per (sigma, sample), vs the clean
     deploy output. ``packed`` comes from ``repro.api.pack_linear``; the evaluation
     runs the deploy path of ``repro.api.linear`` (Pallas kernel when
-    ``cfg.use_kernel``). Returns (n_sigma, n_samples) float64."""
-    dcfg = cfg.replace(mode="deploy")
+    ``cfg.use_kernel``). Returns (n_sigma, n_samples) float64.
+
+    A cfg already on a packed hardware-style backend (deploy/ref/
+    adc_free/binary — DESIGN.md §13) is evaluated on THAT backend, so
+    one harness sweeps every style's variation robustness; non-packed
+    cfgs (emulate) pin to deploy as before."""
+    from repro.api import _packed_config
+    dcfg = _packed_config(cfg)
 
     @jax.jit
     def _eval(k, sigma):

@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: ADC-free CIM matmul with digital psum accumulation.
+
+The ``adc_free`` hardware style (HCiM-style hybrid analog-digital CIM,
+PAPERS.md) removes the per-column ADC from the array pipeline: each
+(split, array-tile, column) partial sum leaves the array as an exact
+integer — bit-sliced MACs are accumulated *digitally* — so there is no
+psum quantization step at all. The psum_bits knob stops being an ADC
+resolution and becomes the digital accumulator width the cost model
+charges (benchmarks/bench_hw_cost.layer_cost(style="adc_free")); the
+kernel itself accumulates exactly.
+
+Relative to ``kernels/cim_matmul._kernel`` the body drops the ADC stage
+(round -> scale -> clip -> rescale in VMEM) *and* the s_p operand — the
+per-column ADC scale stream never leaves HBM because it does not exist
+on this hardware. Everything else is deliberately identical: same grid
+(M/bm, N/bn, k_tiles, n_split) with the reduction dims iterating
+fastest, same packed digit-plane layout, same trailing-N column-shard
+contract (kernels/ops dispatches this kernel per column shard under
+shard_map unchanged, DESIGN.md §10), and cell variation is injected on
+the unpadded packed planes before the pallas_call exactly like the ADC
+kernel — ``perturb_packed`` semantics carry over untouched (§8).
+
+Bit-exactness contract: psums are integer-valued (int x int MACs), so
+``jnp.round`` on the f32 accumulator is the identity up to float
+roundoff snapping — the same snap the ADC kernel applies before
+quantizing. Consequently ``adc_free`` output == the ADC kernel's output
+whenever the ADC is transparent (s_p == 1 and psum_bits wide enough
+that no column clips), which is what the hypothesis property tests in
+tests/test_backends.py pin down.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.variation import perturb_digits, variation_wanted
+
+from .ref import extract_conv_patches
+
+
+def _kernel(a_ref, d_ref, deq_ref, o_ref):
+    s = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(t == 0, s == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[:, 0, :].astype(jnp.float32)          # (bm, rows)
+    d = d_ref[0, 0].astype(jnp.float32)             # (rows, bn)
+    p = jnp.dot(a, d, preferred_element_type=jnp.float32)  # (bm, bn)
+    # digital accumulation: snap the integer-valued MACs (kills float
+    # roundoff, matching the ADC kernel's pre-quantize snap) and add the
+    # dequantized word straight into the accumulator — no ADC stage
+    p = jnp.round(p)
+    deq = deq_ref[0, 0, :].astype(jnp.float32)      # (bn,)
+    o_ref[...] += p * deq[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "interpret"),
+)
+def cim_matmul_adc_free_pallas(
+    a_t: jnp.ndarray,      # (M, k_tiles, rows) integer-valued
+    digits: jnp.ndarray,   # (S, k_tiles, rows, N)
+    deq: jnp.ndarray,      # (S, k_tiles, N) fused dequant scales
+    variation_key=None,    # optional PRNG key: one MC device realization
+    variation_std=None,    # log-normal sigma (float or traced scalar)
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """ADC-free CIM matmul: digital accumulation of bit-sliced psums.
+
+    Same operands as ``cim_matmul_pallas`` minus ``s_p`` (no ADC scale
+    stream exists on this hardware style). Returns (M, N) float32.
+    """
+    if variation_wanted(variation_key, variation_std):
+        # perturb BEFORE block padding: noise indices must match the
+        # packed (unpadded) layout the emulate path perturbs (§8)
+        digits = perturb_digits(digits, variation_key, variation_std)
+    m, k_tiles, rows = a_t.shape
+    n_split = digits.shape[0]
+    n = digits.shape[-1]
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        a_t = jnp.pad(a_t, ((0, pad_m), (0, 0), (0, 0)))
+    if pad_n:
+        digits = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
+        deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad_n)))
+    mp, np_ = m + pad_m, n + pad_n
+
+    # reduction dims (s outer, t inner): the digital accumulator adds the
+    # dequantized words in the SAME row-major (s, t) order the oracle's
+    # einsum reduction uses — unquantized psums carry full mantissas, so
+    # (unlike the ADC kernel's coarse post-quantization words) any
+    # reassociation here is visible at 1 ulp and amplifies through the
+    # next layer's activation-code rounding at model scale
+    grid = (mp // bm, np_ // bn, n_split, k_tiles)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1, rows), lambda i, j, s, t: (i, t, 0)),
+            pl.BlockSpec((1, 1, rows, bn), lambda i, j, s, t: (s, t, 0, j)),
+            pl.BlockSpec((1, 1, bn), lambda i, j, s, t: (s, t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_t, digits, deq)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "c_per_array",
+                     "block_m", "block_n", "interpret"),
+)
+def cim_conv_adc_free_pallas(
+    a_int: jnp.ndarray,    # (B, H, W, C_in) integer-valued codes
+    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out)
+    deq: jnp.ndarray,      # (S, k_tiles, C_out)
+    variation_key=None,
+    variation_std=None,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    padding: str,
+    c_per_array: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """ADC-free CIM conv: same stretched-kernel lowering as
+    ``kernels.cim_conv.cim_conv_pallas`` (patches once, flatten spatial
+    to M, run the tiled matmul grid) but onto the ADC-free kernel.
+
+    Returns (B, H', W', C_out) float32.
+    """
+    n_split, k_tiles, rows, n = digits.shape
+    assert rows == kh * kw * c_per_array, (rows, kh, kw, c_per_array)
+    a_t = extract_conv_patches(a_int, kh, kw, stride, padding, k_tiles,
+                               c_per_array)
+    b, ho, wo = a_t.shape[:3]
+    out = cim_matmul_adc_free_pallas(
+        a_t.reshape(b * ho * wo, k_tiles, rows),
+        digits, deq, variation_key, variation_std,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return out.reshape(b, ho, wo, n)

@@ -136,3 +136,106 @@ def cim_matmul_pallas(
         interpret=interpret,
     )(a_t, digits, s_p, deq)
     return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# batched expert banks (MoE dispatch)
+# ---------------------------------------------------------------------------
+
+def _experts_kernel(a_ref, d_ref, sp_ref, deq_ref, o_ref, *, psum_bits: int,
+                    psum_quant: bool):
+    t = pl.program_id(3)
+    s = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(t == 0, s == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0, :, 0, :].astype(jnp.float32)        # (bm, rows)
+    d = d_ref[0, 0, 0].astype(jnp.float32)           # (rows, bn)
+    p = jnp.dot(a, d, preferred_element_type=jnp.float32)
+
+    if psum_quant:
+        p = jnp.round(p)
+        sp = jnp.maximum(sp_ref[0, 0, 0, :].astype(jnp.float32), 1e-9)
+        if psum_bits == 1:
+            p = jnp.where(p >= 0, 1.0, -1.0) * sp[None, :]
+        else:
+            qn = float(-(2 ** (psum_bits - 1)))
+            qp = float(2 ** (psum_bits - 1) - 1)
+            p = jnp.clip(jnp.round(p / sp[None, :]), qn, qp) * sp[None, :]
+
+    deq = deq_ref[0, 0, 0, :].astype(jnp.float32)
+    o_ref[...] += (p * deq[None, :])[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("psum_bits", "psum_quant", "block_m", "block_n",
+                     "interpret"),
+)
+def cim_matmul_experts_pallas(
+    a_t: jnp.ndarray,      # (E, C, k_tiles, rows) integer-valued
+    digits: jnp.ndarray,   # (E, S, k_tiles, rows, N)
+    s_p: jnp.ndarray,      # (E, S, k_tiles, N)
+    deq: jnp.ndarray,      # (E, S, k_tiles, N)
+    *,
+    psum_bits: int,
+    psum_quant: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Whole-bank MoE variant: all E experts' capacity buffers through ONE
+    pallas_call with the expert index as the leading (slowest) grid
+    dimension, instead of ``lax.map`` issuing E sequential calls
+    (``pallas_call`` has no batching rule, so vmap can't do this).
+
+    Per output block the (t, s) accumulation order, block shapes and
+    last-block padding are IDENTICAL to ``cim_matmul_pallas`` on one
+    expert's (C, K) slice — the batched path is bit-exact with the
+    ``lax.map`` fallback, which is what keeps the model-zoo deploy-vs-
+    emulate parity gates green. Variation injection is not plumbed here:
+    the packed expert dispatch (``models.layers._expert_matmul``) never
+    injects per-call noise (bank noise is baked at pack time), and
+    callers needing it take the ``lax.map`` path.
+    """
+    e, m, k_tiles, rows = a_t.shape
+    n_split = digits.shape[1]
+    n = digits.shape[-1]
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        a_t = jnp.pad(a_t, ((0, 0), (0, pad_m), (0, 0), (0, 0)))
+    if pad_n:
+        digits = jnp.pad(digits,
+                         ((0, 0), (0, 0), (0, 0), (0, 0), (0, pad_n)))
+        s_p = jnp.pad(s_p, ((0, 0), (0, 0), (0, 0), (0, pad_n)),
+                      constant_values=1.0)
+        deq = jnp.pad(deq, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
+    mp, np_ = m + pad_m, n + pad_n
+
+    grid = (e, mp // bm, np_ // bn, k_tiles, n_split)
+    out = pl.pallas_call(
+        functools.partial(_experts_kernel, psum_bits=psum_bits,
+                          psum_quant=psum_quant),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, 1, rows),
+                         lambda ei, i, j, t, s: (ei, i, t, 0)),
+            pl.BlockSpec((1, 1, 1, rows, bn),
+                         lambda ei, i, j, t, s: (ei, s, t, 0, j)),
+            pl.BlockSpec((1, 1, 1, bn),
+                         lambda ei, i, j, t, s: (ei, s, t, j)),
+            pl.BlockSpec((1, 1, 1, bn),
+                         lambda ei, i, j, t, s: (ei, s, t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda ei, i, j, t, s: (ei, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_t, digits, s_p, deq)
+    return out[:, :m, :n]

@@ -42,8 +42,9 @@ from repro.core.variation import perturb_digits, variation_wanted
 from repro.obs import adc as obs_adc
 
 from . import ref
+from .cim_adc_free import cim_conv_adc_free_pallas, cim_matmul_adc_free_pallas
 from .cim_conv import cim_conv_pallas
-from .cim_matmul import cim_matmul_pallas
+from .cim_matmul import cim_matmul_experts_pallas, cim_matmul_pallas
 
 #: Mesh axis the packed column (output-channel) dimension shards over by
 #: default — the tensor-parallel axis of the serving meshes (launch/serve
@@ -100,7 +101,7 @@ def _record_saturation(a2, digits, s_p, *, psum_bits, variation_key,
 def _cim_matmul_sharded(
     a2, digits, s_p, deq, mesh, mesh_axis, *,
     psum_bits, psum_quant, use_kernel, block_m, block_n,
-    variation_key, variation_std,
+    variation_key, variation_std, adc_free=False,
 ):
     """Column-parallel CIM matmul: one kernel shard per device.
 
@@ -126,7 +127,16 @@ def _cim_matmul_sharded(
     interp = not _on_tpu()
 
     def local(a_, d_, sp_, dq_):
-        if use_kernel:
+        if adc_free:
+            # ADC-free style (DESIGN.md §13): no s_p stream — sp_ rides
+            # the shard_map signature so the specs stay uniform, unused
+            if use_kernel:
+                out = cim_matmul_adc_free_pallas(
+                    a_, d_, dq_, block_m=block_m, block_n=block_n,
+                    interpret=interp)
+            else:
+                out = ref.cim_matmul_adc_free_ref(a_, d_, dq_)
+        elif use_kernel:
             out = cim_matmul_pallas(
                 a_, d_, sp_, dq_, psum_bits=psum_bits,
                 psum_quant=psum_quant, block_m=block_m, block_n=block_n,
@@ -161,6 +171,7 @@ def cim_matmul(
     variation_std=None,
     mesh=None,
     mesh_axis: str = COL_SHARD_AXIS,
+    adc_free: bool = False,
 ) -> jnp.ndarray:
     """CIM matmul over pre-tiled inputs.
 
@@ -172,6 +183,9 @@ def cim_matmul(
     mesh/mesh_axis: column-shard the planes over this mesh axis (>1
         device: shard_map column-parallel dispatch, bit-exact with the
         single-device path; DESIGN.md §10)
+    adc_free: dispatch the ADC-free hardware style (DESIGN.md §13) —
+        exact digital psum accumulation, s_p ignored, no saturation
+        side-output (there is no ADC to saturate)
     returns (..., N) float32
     """
     batch_shape = a_t.shape[:-2]
@@ -179,7 +193,7 @@ def cim_matmul(
     for d in batch_shape:
         m *= d
     a2 = a_t.reshape((m,) + a_t.shape[-2:])
-    if obs_adc.enabled() and psum_quant:
+    if obs_adc.enabled() and psum_quant and not adc_free:
         _record_saturation(a2, digits, s_p, psum_bits=psum_bits,
                            variation_key=variation_key,
                            variation_std=variation_std)
@@ -188,7 +202,18 @@ def cim_matmul(
             a2, digits, s_p, deq, mesh, mesh_axis,
             psum_bits=psum_bits, psum_quant=psum_quant,
             use_kernel=use_kernel, block_m=block_m, block_n=block_n,
-            variation_key=variation_key, variation_std=variation_std)
+            variation_key=variation_key, variation_std=variation_std,
+            adc_free=adc_free)
+    elif adc_free and use_kernel:
+        out = cim_matmul_adc_free_pallas(
+            a2, digits, deq, variation_key, variation_std,
+            block_m=block_m, block_n=block_n,
+            interpret=not _on_tpu(),
+        )
+    elif adc_free:
+        if variation_wanted(variation_key, variation_std):
+            digits = perturb_digits(digits, variation_key, variation_std)
+        out = ref.cim_matmul_adc_free_ref(a2, digits, deq)
     elif use_kernel:
         out = cim_matmul_pallas(
             a2, digits, s_p, deq, variation_key, variation_std,
@@ -204,6 +229,37 @@ def cim_matmul(
             psum_bits=psum_bits, psum_quant=psum_quant,
         )
     return out.reshape(batch_shape + (digits.shape[-1],))
+
+
+def cim_matmul_experts(
+    a_t: jnp.ndarray,      # (E, C, k_tiles, rows) integer-valued
+    digits: jnp.ndarray,   # (E, S, k_tiles, rows, N) cell planes
+    s_p: jnp.ndarray,      # (E, S, k_tiles, N)
+    deq: jnp.ndarray,      # (E, S, k_tiles, N)
+    *,
+    psum_bits: int,
+    psum_quant: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """Batched MoE expert-bank dispatch: every expert's capacity buffer
+    through ONE kernel launch (expert index = leading grid dimension),
+    bit-exact with ``lax.map`` of ``cim_matmul`` over experts — same
+    block shapes, same (t, s) accumulation order per output block.
+
+    The caller (``models.layers._expert_matmul``) gates this to the
+    plain deploy fast path: single-device (no column-sharded mesh),
+    ``use_kernel``, no per-call variation, saturation collector unarmed,
+    bank small enough to stream. Everything outside that gate falls back
+    to ``lax.map``. Returns (E, C, N) float32."""
+    if digits.dtype == jnp.int4:
+        digits = digits.astype(jnp.int8)
+    return cim_matmul_experts_pallas(
+        a_t, digits, s_p, deq,
+        psum_bits=psum_bits, psum_quant=psum_quant,
+        block_m=block_m, block_n=block_n,
+        interpret=not _on_tpu(),
+    )
 
 
 def cim_conv(
@@ -226,6 +282,7 @@ def cim_conv(
     variation_std=None,
     mesh=None,
     mesh_axis: str = COL_SHARD_AXIS,
+    adc_free: bool = False,
 ) -> jnp.ndarray:
     """CIM conv over activation codes and packed conv digit planes.
 
@@ -245,7 +302,7 @@ def cim_conv(
     if not isinstance(padding, str):
         # hashable for the jit static arg
         padding = tuple((int(lo), int(hi)) for lo, hi in padding)
-    if obs_adc.enabled() and psum_quant:
+    if obs_adc.enabled() and psum_quant and not adc_free:
         k_tiles = digits.shape[1]
         p_t = ref.extract_conv_patches(a_int, kh, kw, stride, padding,
                                        k_tiles, c_per_array)
@@ -265,7 +322,27 @@ def cim_conv(
             a_t.reshape(b * ho * wo, k_tiles, rows), digits, s_p, deq,
             mesh, mesh_axis, psum_bits=psum_bits, psum_quant=psum_quant,
             use_kernel=use_kernel, block_m=block_m, block_n=block_n,
-            variation_key=variation_key, variation_std=variation_std)
+            variation_key=variation_key, variation_std=variation_std,
+            adc_free=adc_free)
+        return out.reshape(b, ho, wo, digits.shape[-1])
+    if adc_free and use_kernel:
+        return cim_conv_adc_free_pallas(
+            a_int, digits, deq, variation_key, variation_std,
+            kh=kh, kw=kw, stride=stride, padding=padding,
+            c_per_array=c_per_array,
+            block_m=block_m, block_n=block_n,
+            interpret=not _on_tpu(),
+        )
+    if adc_free:
+        if variation_wanted(variation_key, variation_std):
+            digits = perturb_digits(digits, variation_key, variation_std)
+        k_tiles, rows = digits.shape[1], digits.shape[2]
+        a_t = ref.extract_conv_patches(a_int.astype(jnp.float32), kh, kw,
+                                       stride, padding, k_tiles,
+                                       c_per_array)
+        b, ho, wo = a_t.shape[:3]
+        out = ref.cim_matmul_adc_free_ref(
+            a_t.reshape(b * ho * wo, k_tiles, rows), digits, deq)
         return out.reshape(b, ho, wo, digits.shape[-1])
     if use_kernel:
         return cim_conv_pallas(

@@ -47,6 +47,25 @@ def cim_matmul_ref(
     return jnp.einsum("mstn,stn->mn", psum, deq.astype(jnp.float32))
 
 
+def cim_matmul_adc_free_ref(
+    a_t: jnp.ndarray,      # (M, k_tiles, rows)    integer-valued float
+    digits: jnp.ndarray,   # (S, k_tiles, rows, N) int8 or float digits
+    deq: jnp.ndarray,      # (S, k_tiles, N)       fused dequant scales
+) -> jnp.ndarray:
+    """ADC-free CIM matmul oracle (HCiM-style hardware, DESIGN.md §13):
+    per-(split, array) integer MACs leave the array exact — partial sums
+    are accumulated digitally, so there is no ADC quantization stage and
+    no s_p operand. Returns (M, N) float32."""
+    psum = jnp.einsum(
+        "mtr,strn->mstn",
+        a_t.astype(jnp.float32),
+        digits.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    psum = jnp.round(psum)  # same integer snap as the ADC oracle
+    return jnp.einsum("mstn,stn->mn", psum, deq.astype(jnp.float32))
+
+
 def lsq_fake_quant_ref(x, s, qn: float, qp: float):
     s = jnp.maximum(s, 1e-9)
     return jnp.clip(jnp.round(x / s), qn, qp) * s

@@ -44,12 +44,13 @@ def conv_specs(
     keeps the float HWIO weight for QAT. The out_axis lands on the planes'
     last (C_out) axis — the column-shard axis of mesh-aware deploy serving
     (DESIGN.md §10), matching ``DeployArtifact.shard``'s placement."""
-    from repro.api.backends import is_packed
+    from repro.api.backends import conv_plane_tiling, is_packed, plane_bits
     from repro.core.granularity import conv_tiling
 
-    if is_packed(cim):
-        t, cpa = conv_tiling(kh, kw, c_in, c_out, cim.array_rows,
-                             cim.array_cols, cim.weight_bits, cim.cell_bits)
+    packed = is_packed(cim)
+    if packed:
+        # plane geometry is the backend's (binary: S=1 sign planes)
+        t, cpa = conv_plane_tiling(cim, kh, kw, c_in, c_out)
         specs = {"w_digits": ParamSpec(
             (t.n_split, t.k_tiles, kh, kw, cpa, c_out), cim.store_dtype(),
             "zeros", (None, None, None, None, None, out_axis))}
@@ -62,10 +63,18 @@ def conv_specs(
         specs = {"w": ParamSpec((kh, kw, c_in, c_out), dtype, he,
                                 (None, None, None, out_axis))}
     if cim is not None and cim.enabled:
-        t, _ = conv_tiling(kh, kw, c_in, c_out, cim.array_rows,
-                           cim.array_cols, cim.weight_bits, cim.cell_bits)
-        wg = t.weight_scale_shape(cim.weight_granularity)
-        pg = t.psum_scale_shape(cim.psum_granularity)
+        if packed and plane_bits(cim) != (cim.weight_bits, cim.cell_bits):
+            # plane-geometry backends (binary) store FULL column-
+            # granularity scales (see nn.linear.linear_specs)
+            from repro.core.granularity import Granularity
+            t, _ = conv_plane_tiling(cim, kh, kw, c_in, c_out)
+            wg = t.weight_scale_shape(Granularity.COLUMN)
+            pg = t.psum_scale_shape(Granularity.COLUMN)
+        else:
+            t, _ = conv_tiling(kh, kw, c_in, c_out, cim.array_rows,
+                               cim.array_cols, cim.weight_bits, cim.cell_bits)
+            wg = t.weight_scale_shape(cim.weight_granularity)
+            pg = t.psum_scale_shape(cim.psum_granularity)
         specs["s_w"] = ParamSpec(wg, jnp.float32, "const:0.05",
                                  (None, out_axis if wg[1] == c_out else None))
         specs["s_p"] = ParamSpec(pg, jnp.float32, "const:8.0",
@@ -628,6 +637,59 @@ def moe_specs(cfg: ModelConfig) -> Dict:
     return sp
 
 
+#: largest packed expert bank (bytes) eligible for single-launch batched
+#: dispatch — banks beyond this stream per expert via lax.map instead.
+_EXPERT_BANK_BATCH_BYTES = 4 * 1024 * 1024
+
+
+def _batched_experts_ok(p: Dict, nm: str, cfg: ModelConfig) -> bool:
+    """Gate for the single-launch batched expert path: the plain deploy
+    fast path only — kernel dispatch, unsharded mesh, saturation
+    collector unarmed, unstacked (E-leading) bank that fits the VMEM
+    streaming budget. Everything else keeps the proven lax.map."""
+    from repro.kernels import ops as kops
+    from repro.nn.module import current_mesh
+    from repro.obs import adc as obs_adc
+    d = p[f"{nm}_digits"]
+    return (cfg.cim.mode == "deploy" and cfg.cim.use_kernel
+            and getattr(d, "ndim", 0) == 5
+            and not obs_adc.enabled()
+            and kops.col_shards(current_mesh()) == 1
+            and d.size * max(1, d.dtype.itemsize) <= _EXPERT_BANK_BATCH_BYTES)
+
+
+def _batched_expert_matmul(p: Dict, nm: str, x: jnp.ndarray,
+                           cfg: ModelConfig) -> jnp.ndarray:
+    """All experts' capacity buffers through ONE kernel launch
+    (kernels.ops.cim_matmul_experts; expert = leading grid dim) — the
+    per-expert deploy prep (act codes, input tiling, fused dequant) is
+    vmapped, mirroring core.cim_linear._forward_deploy per expert, and
+    the kernel is bit-exact with lax.map of the per-expert kernel."""
+    from repro.core.bitsplit import place_values
+    from repro.core.cim_linear import (_full_psum_scale, _full_weight_scale,
+                                       _tile_inputs, deploy_act_codes)
+    from repro.kernels import ops as kops
+    cim = cfg.cim
+    digits = p[f"{nm}_digits"]
+    t = cim.tiling(x.shape[-1], digits.shape[-1])
+    places = place_values(cim.weight_bits, cim.cell_bits)
+
+    def prep(xe, s_w, s_p, s_a):
+        a_t = _tile_inputs(deploy_act_codes(xe, s_a, cim), t)
+        pe = {"s_w": s_w, "s_p": s_p, "s_a": s_a}
+        sp = _full_psum_scale(pe, t)
+        deq = (places[:, None, None] * _full_weight_scale(pe, t)[None]
+               * jnp.maximum(s_a, 1e-9))
+        return a_t, sp, deq
+
+    a_t, sp, deq = jax.vmap(prep)(x, p[f"{nm}_s_w"], p[f"{nm}_s_p"],
+                                  p[f"{nm}_s_a"])
+    y = kops.cim_matmul_experts(a_t, digits, sp, deq,
+                                psum_bits=cim.psum_bits,
+                                psum_quant=cim.psum_quant)
+    return y.astype(cdt(cfg))
+
+
 def _expert_matmul(p: Dict, nm: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     """x: (E, C, K) -> (E, C, N), optionally CIM-quantized per expert."""
     if not cfg.cim.enabled:
@@ -638,9 +700,12 @@ def _expert_matmul(p: Dict, nm: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.nd
     if is_packed(cfg.cim) and f"{nm}_digits" in p:
         # packed expert bank (pack_model): per-expert digit planes with
         # per-expert column scales, dispatched through the fused deploy
-        # path. lax.map (scan) rather than vmap: pallas_call carries no
-        # batching rule, and the column-sharded kernel wrapper is already
-        # proven under scan by the stacked-layer serving path.
+        # path. Small deploy banks take the single-launch batched kernel;
+        # otherwise lax.map (scan) rather than vmap: pallas_call carries
+        # no batching rule, and the column-sharded kernel wrapper is
+        # already proven under scan by the stacked-layer serving path.
+        if _batched_experts_ok(p, nm, cfg):
+            return _batched_expert_matmul(p, nm, x, cfg)
         def one(args):
             xe, d, s_w, s_p, s_a = args
             return linear(xe, {"w_digits": d, "s_w": s_w, "s_p": s_p,

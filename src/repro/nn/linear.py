@@ -27,23 +27,36 @@ def linear_specs(
     dtype=jnp.float32,
     init: str | None = None,
 ) -> Dict[str, ParamSpec]:
-    from repro.api.backends import is_packed  # lazy: api builds on nn
+    from repro.api.backends import (is_packed, plane_bits,
+                                    plane_tiling)  # lazy: api builds on nn
     w_init = init or "fan_in:1.0"
-    if is_packed(cim):
+    packed = is_packed(cim)
+    if packed:
         # packed-int inference: weights live ONLY as digit planes. The
         # out_axis lands on the planes' LAST axis (N) — the column-shard
         # axis of the mesh-aware deploy path (DESIGN.md §10) — so spec-
-        # initialized packed params are born in the served layout.
-        t = cim.tiling(k, n)
+        # initialized packed params are born in the served layout. The
+        # plane geometry is the BACKEND's (binary packs S=1 sign planes),
+        # not necessarily the config's training-time bit widths.
+        t = plane_tiling(cim, k, n)
         specs = {"w_digits": ParamSpec(
             (t.n_split, t.k_tiles, t.array_rows, n), cim.store_dtype(),
             "zeros", (None, None, None, out_axis))}
     else:
         specs = {"w": ParamSpec((k, n), dtype, w_init, (in_axis, out_axis))}
     if cim is not None and cim.enabled:
-        t = cim.tiling(k, n)
-        wg = t.weight_scale_shape(cim.weight_granularity)
-        pg = t.psum_scale_shape(cim.psum_granularity)
+        if packed and plane_bits(cim) != (cim.weight_bits, cim.cell_bits):
+            # plane-geometry backends (binary) store FULL column-
+            # granularity scales — granularity.broadcast_* is shape-
+            # driven, so any cfg granularity still reads them at forward.
+            from repro.core.granularity import Granularity
+            t = plane_tiling(cim, k, n)
+            wg = t.weight_scale_shape(Granularity.COLUMN)
+            pg = t.psum_scale_shape(Granularity.COLUMN)
+        else:
+            t = cim.tiling(k, n)
+            wg = t.weight_scale_shape(cim.weight_granularity)
+            pg = t.psum_scale_shape(cim.psum_granularity)
         # scales follow the weight's output-axis sharding when they have a
         # full-N axis; tile-level axes stay replicated.
         w_sp = (None, out_axis if wg[1] == n else None)

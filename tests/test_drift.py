@@ -296,7 +296,8 @@ def test_load_rejects_future_layout_with_typed_error(tmp_path):
     assert "layout_version" in msg
     assert str(ARTIFACT_LAYOUT_VERSION + 7) in msg
     assert str(ARTIFACT_LAYOUT_VERSION) in msg
-    assert "PR 6" in msg                        # names the writer PR
+    from repro.api.artifact import _LAYOUT_WRITERS
+    assert _LAYOUT_WRITERS[ARTIFACT_LAYOUT_VERSION] in msg  # names the writer PR
     # typed: still catchable as ValueError (pre-PR-6 callers)
     assert isinstance(ei.value, ValueError)
 

@@ -22,6 +22,7 @@ SNAPSHOT = REPO / "tools" / "api_surface.txt"
 # public packages whose __all__ is contract; extend as surfaces stabilize
 MODULES = (
     "repro.api",
+    "repro.backends",
     "repro.core",
     "repro.checkpoint",
     "repro.obs",
