@@ -20,19 +20,36 @@ def dtype_bytes(name: str) -> float:
     return {"int4": 0.5, "int8": 1.0, "bfloat16": 2.0, "float32": 4.0}[name]
 
 
+def plane_stream_bytes(pack_dtype: str, rows: int) -> float:
+    """Bytes per *logical* digit actually streamed from HBM.
+
+    int4 planes only hit the half-byte width when they nibble-pack two
+    digits per uint8 (layout v4: even packed axis, repro.core.nibble);
+    dense int4 — odd axes, or pre-v4 artifacts — streams as int8 (the
+    kernel wrappers upcast before the pallas_call). Charging unpacked
+    int4 at 0.5 B, as this model did before v4, undercounted the wire
+    2x."""
+    if pack_dtype == "int4":
+        return 0.5 if rows % 2 == 0 else 1.0
+    return dtype_bytes(pack_dtype)
+
+
 def traffic_model(m, k, n, n_split, array_rows, *, act_dtype="int8",
                   pack_dtype="int8"):
     """HBM bytes: fused kernel vs materializing every (split, tile) psum.
 
-    Byte widths follow what the deploy path actually stores: activation
-    codes are int8 (cim_linear casts when the act_bits range fits) and
-    digit planes are ``cfg.pack_dtype`` (int8, or int4 for <=3-bit
-    cells) — not the 4-byte floats the emulate path moves."""
+    Byte widths follow what the deploy path actually *streams*:
+    activation codes are int8 (cim_linear casts when the act_bits range
+    fits) and digit planes cost ``plane_stream_bytes`` each — nibble-
+    packed uint8 for even-row int4 (0.5 B/digit), int8 otherwise — plus
+    one occupancy byte per (split, tile, column) for the skip maps. Not
+    the 4-byte floats the emulate path moves."""
     bytes_act = dtype_bytes(act_dtype)
-    bytes_dig = dtype_bytes(pack_dtype)
+    bytes_dig = plane_stream_bytes(pack_dtype, array_rows)
     k_tiles = (k + array_rows - 1) // array_rows
-    fused = int(m * k * bytes_act + n_split * k * n * bytes_dig + m * n * 4
-                + 2 * n_split * k_tiles * n * 4)
+    occ = n_split * k_tiles * n                         # uint8 skip maps
+    fused = int(m * k * bytes_act + n_split * k * n * bytes_dig + occ
+                + m * n * 4 + 2 * n_split * k_tiles * n * 4)
     naive = fused + 2 * m * n_split * k_tiles * n * 4   # psum write+read
     return fused, naive
 
@@ -75,7 +92,9 @@ def run(csv=None):
     for pack in ("int8", "int4"):
         fused, naive = traffic_model(m, k_tiles * rows, n, n_split, rows,
                                      pack_dtype=pack)
-        line = (f"kernel,hbm_traffic_model,pack={pack},fused_bytes={fused},"
+        line = (f"kernel,hbm_traffic_model,pack={pack},"
+                f"plane_B_per_digit={plane_stream_bytes(pack, rows)},"
+                f"fused_bytes={fused},"
                 f"naive_bytes={naive},saving={naive/fused:.2f}x")
         print(line)
         if csv is not None:

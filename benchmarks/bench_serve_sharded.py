@@ -17,6 +17,12 @@ meshes through ``engine_from_artifact`` — the exact path
   the padded shard (the kernel's last-shard padding rule). Replicated
   bytes (embeddings, norms, non-column scales) are reported separately.
 
+The curve is served twice — ``pack_dtype='int8'`` and ``'int4'``. The
+int4 points stream layout-v4 nibble-packed planes (two digits per uint8
+plus occupancy maps, DESIGN.md §14) and additionally report
+``plane_reduction_vs_v3``: per-device plane bytes against the v3 layout
+(dense int4 at its true int8 wire width), asserted >= 1.8x.
+
 Run under an emulated mesh for the scaling curve (what CI does):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
@@ -34,20 +40,33 @@ import jax
 import numpy as np
 
 
-def plane_bytes(artifact, n_dev: int):
+def plane_bytes(artifact, n_dev: int, *, layout: str = "v4"):
     """(per_device_sharded, replicated) bytes for one column-shard count.
 
     Walks the packed tree with the same rule ``DeployArtifact.shard``
     uses: arrays in a CIM node whose last axis is the node's column count
     shard when the columns divide n_dev; ragged nodes — and everything
     without a full column axis — replicate (shard() keeps ragged layers
-    resident everywhere; the kernel pads-and-shards them per call)."""
+    resident everywhere; the kernel pads-and-shards them per call).
+
+    Bytes are what actually crosses the wire, not the nominal element
+    width: dense int4 planes stream as int8 (the kernel wrappers upcast
+    before the pallas_call — charging them 4 bits, as this bench did
+    before layout v4, undercounted 2x), nibble-packed uint8 planes are
+    counted as stored. ``layout='v3'`` re-prices a v4 tree at the old
+    layout — nibble planes back at one byte per *logical* digit, no
+    occupancy maps — to measure what v4 saves on the same model."""
     import jax.numpy as jnp
     sharded = 0
     replicated = 0
 
-    def nbytes(a):
-        bits = 4 if a.dtype == jnp.int4 else a.dtype.itemsize * 8
+    def nbytes(k, a):
+        if layout == "v3":
+            if k.endswith("_occ"):            # v3 had no skip maps
+                return 0
+            if k.endswith("_digits") and a.dtype == jnp.uint8:
+                return int(a.size) * 2        # dense int4 @ int8 wire
+        bits = 8 if a.dtype == jnp.int4 else a.dtype.itemsize * 8
         return int(a.size * bits) // 8
 
     def walk(node):
@@ -55,12 +74,13 @@ def plane_bytes(artifact, n_dev: int):
         if isinstance(node, dict):
             if "w_digits" in node:
                 n = int(node["w_digits"].shape[-1])
-                for v in node.values():
+                for k, v in node.items():
                     if (getattr(v, "ndim", 0) >= 1 and v.shape[-1] == n
                             and n % n_dev == 0):
-                        sharded += nbytes(v) // n_dev
+                        sharded += nbytes(k, v) // n_dev
                     else:
-                        replicated += nbytes(v) if hasattr(v, "size") else 0
+                        replicated += (nbytes(k, v)
+                                       if hasattr(v, "size") else 0)
                 return
             for v in node.values():
                 walk(v)
@@ -68,7 +88,7 @@ def plane_bytes(artifact, n_dev: int):
             for v in node:
                 walk(v)
         else:
-            replicated += nbytes(node) if hasattr(node, "size") else 0
+            replicated += nbytes("", node) if hasattr(node, "size") else 0
     walk(artifact.params)
     return sharded, replicated
 
@@ -81,55 +101,73 @@ def run(csv=None, *, batch=2, prompt_len=8, new_tokens=16, out_json=None):
     from repro.nn.module import session_mesh
     from repro.serve.engine import engine_from_artifact
 
-    cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
-                    act_bits=8, psum_bits=6, array_rows=128, array_cols=128,
-                    use_kernel=False)
-    cfg = get_config("qwen3-0.6b", reduced=True, cim=cim)
-    model = get_model(cfg)
-    params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
-    artifact = model_artifact(params, cim, meta={"arch": "qwen3-0.6b"})
-
+    cfg = None
     n_avail = len(jax.devices())
     counts = [d for d in (1, 2, 4, 8, 16) if d <= n_avail]
-    prompts = np.random.RandomState(0).randint(
-        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
 
     points = []
-    base = None
-    for d in counts:
-        mesh = None if d == 1 else jax.make_mesh((d,), ("model",))
-        with session_mesh(mesh):   # scope: next d must not see this mesh
-            eng = engine_from_artifact(artifact, cfg, mesh=mesh,
-                                       batch_size=batch, max_len=256)
-            eng.generate_batch(prompts, 2)          # warm the jit caches
-            t0 = time.time()
-            out = eng.generate_batch(prompts, new_tokens)
-            dt = time.time() - t0
-        if base is None:
-            base = np.asarray(out)
-        assert np.array_equal(base, np.asarray(out)), \
-            f"sharded serving diverged at {d} devices"
-        tps = out.shape[0] * out.shape[1] / dt
-        shard_b, rep_b = plane_bytes(artifact, d)
-        if d == 1:
-            bytes_1dev = shard_b + rep_b
-        # §7 roofline: decode is weight-HBM-bound, so modeled tokens/sec
-        # scales as the inverse of the per-device bytes read per step
-        speedup = round(bytes_1dev / (shard_b + rep_b), 3)
-        points.append({"devices": d, "tokens_per_sec": round(tps, 2),
-                       "per_device_plane_bytes": shard_b,
-                       "replicated_bytes": rep_b,
-                       "modeled_decode_speedup": speedup})
-        line = (f"serve_sharded,{d},{tps:.2f},{shard_b},{rep_b},{speedup}")
-        print(line)
-        if csv is not None:
-            csv.append(line)
+    for pack in ("int8", "int4"):
+        cim = CIMConfig(enabled=True, mode="emulate", weight_bits=4,
+                        cell_bits=2, act_bits=8, psum_bits=6, array_rows=128,
+                        array_cols=128, use_kernel=False, pack_dtype=pack)
+        if cfg is None:
+            cfg = get_config("qwen3-0.6b", reduced=True, cim=cim)
+            model = get_model(cfg)
+            params = init_params(model.specs(cfg.replace(cim=cim)),
+                                 jax.random.PRNGKey(0))
+            prompts = np.random.RandomState(0).randint(
+                0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+        artifact = model_artifact(params, cim, meta={"arch": "qwen3-0.6b"})
 
-    doc = {"schema": "bench_serve_sharded/v1", "arch": "qwen3-0.6b-reduced",
+        base = None
+        bytes_1dev = None
+        for d in counts:
+            mesh = None if d == 1 else jax.make_mesh((d,), ("model",))
+            with session_mesh(mesh):  # scope: next d must not see this mesh
+                eng = engine_from_artifact(artifact, cfg.replace(cim=cim),
+                                           mesh=mesh, batch_size=batch,
+                                           max_len=256)
+                eng.generate_batch(prompts, 2)      # warm the jit caches
+                t0 = time.time()
+                out = eng.generate_batch(prompts, new_tokens)
+                dt = time.time() - t0
+            if base is None:
+                base = np.asarray(out)
+            assert np.array_equal(base, np.asarray(out)), \
+                f"sharded serving diverged at {d} devices (pack={pack})"
+            tps = out.shape[0] * out.shape[1] / dt
+            shard_b, rep_b = plane_bytes(artifact, d)
+            if bytes_1dev is None:
+                bytes_1dev = shard_b + rep_b
+            # §7 roofline: decode is weight-HBM-bound, so modeled
+            # tokens/sec scales inversely with per-device bytes per step
+            speedup = round(bytes_1dev / (shard_b + rep_b), 3)
+            point = {"devices": d, "pack_dtype": pack,
+                     "tokens_per_sec": round(tps, 2),
+                     "per_device_plane_bytes": shard_b,
+                     "replicated_bytes": rep_b,
+                     "modeled_decode_speedup": speedup}
+            if pack == "int4":
+                # what the v3 layout streamed for the same shard (dense
+                # int4 at int8 wire width, no occupancy maps)
+                v3_b, _ = plane_bytes(artifact, d, layout="v3")
+                point["v3_plane_bytes"] = v3_b
+                point["plane_reduction_vs_v3"] = round(v3_b / shard_b, 3)
+                assert v3_b / shard_b >= 1.8, \
+                    "nibble packing must cut per-device int4 plane " \
+                    "bytes >= 1.8x vs the v3 layout"
+            points.append(point)
+            line = (f"serve_sharded,{pack},{d},{tps:.2f},{shard_b},{rep_b},"
+                    f"{speedup}")
+            print(line)
+            if csv is not None:
+                csv.append(line)
+
+    doc = {"schema": "bench_serve_sharded/v2", "arch": "qwen3-0.6b-reduced",
            "batch": batch, "prompt_len": prompt_len,
            "new_tokens": new_tokens,
            # only meaningful when more than one mesh size was compared
-           "bit_exact_across_meshes": len(points) > 1,
+           "bit_exact_across_meshes": len(counts) > 1,
            "points": points}
     if out_json is not None:
         # opt-in (module entry point / CI sharded job): tokens_per_sec is

@@ -41,8 +41,12 @@ from repro.core.variation import path_fold_key
 # recalibration, eval/recalibrate.py); layout 3 stamps the packing
 # backend (``head["backend"]`` == config.mode, DESIGN.md §13) so tools
 # can see which hardware style an artifact targets from artifact.json
-# alone. Readers of 3 still read 1 and 2.
-ARTIFACT_LAYOUT_VERSION = 3
+# alone. Layout 4 (DESIGN.md §14) stores int4 digit planes nibble-packed
+# (two 4-bit digits per uint8 byte along the row/channel-slice axis) and
+# adds a per-(split, array tile, column) ``w_occ`` occupancy map next to
+# every plane. Readers of 4 still read 1-3: ``load`` migrates older
+# standard-pack artifacts in memory (``_migrate_pre_v4``) bit-exactly.
+ARTIFACT_LAYOUT_VERSION = 4
 
 # Version of the ScaleDelta side-artifact format (eval/recalibrate.py).
 # Stamped into a delta at fit time and into ``artifact.meta`` at apply
@@ -52,7 +56,8 @@ SCALE_DELTA_VERSION = 1
 # Which PR introduced each on-disk format version — named in version-
 # mismatch errors so "which side is stale" is answerable from the message.
 _LAYOUT_WRITERS = {1: "PR 3 (lifecycle API)", 2: "PR 6 (self-healing serving)",
-                   3: "PR 9 (hardware-style backends)"}
+                   3: "PR 9 (hardware-style backends)",
+                   4: "PR 10 (nibble planes + occupancy)"}
 _DELTA_WRITERS = {1: "PR 6 (self-healing serving)"}
 
 _KINDS = ("linear", "conv", "model")
@@ -80,6 +85,60 @@ class ArtifactVersionError(ValueError):
         if detail:
             msg += " " + detail
         super().__init__(msg)
+
+
+def _migrate_pre_v4(params, cfg: CIMConfig):
+    """In-memory migration of a layout 1-3 params tree to layout 4.
+
+    For every digit-plane leaf (``*_digits``) of a standard-pack backend:
+
+      * add the sibling ``*_occ`` occupancy map (computed from the planes
+        as stored — for variation-baked float planes this is still
+        exact: multiplicative noise keeps zero cells zero);
+      * nibble-pack dense int4 planes two-per-byte when the packed axis
+        is even (``repro.core.nibble``). int8 / float planes and odd
+        axes keep their dense storage.
+
+    The decode path is unchanged arithmetic, so a migrated artifact
+    serves bit-exact with the bytes it was written with
+    (tests/test_artifact_migration.py). Backends with their own pack
+    format (``pack_linear``/``pack_conv`` set, e.g. ``binary``) are
+    passed through untouched — their planes are not the standard digit
+    layout and their forwards do not consume occupancy maps.
+    """
+    from repro.core.nibble import (can_pack_nibbles, occupancy_map,
+                                   pack_nibbles)
+    from .backends import get_backend
+    b = get_backend(cfg.mode)
+    if b.pack_linear is not None or b.pack_conv is not None:
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if isinstance(v, (dict, list, tuple)):
+                    out[k] = walk(v)
+                    continue
+                out[k] = v
+                if not k.endswith("_digits"):
+                    continue
+                d = jnp.asarray(v)
+                # conv planes are always the quartet key "w_digits" with
+                # the 6-D (or stacked 7-D) geometry shape; every other
+                # rank — incl. rank-5/6 expert banks — is linear
+                conv = k == "w_digits" and d.ndim >= 6
+                occ_key = k[: -len("_digits")] + "_occ"
+                if occ_key not in node:
+                    out[occ_key] = occupancy_map(d, conv=conv)
+                if (jnp.dtype(d.dtype) == jnp.dtype(jnp.int4)
+                        and can_pack_nibbles(d.shape[-2], d.dtype)):
+                    out[k] = pack_nibbles(d)
+            return out
+        if isinstance(node, (list, tuple)):
+            return [walk(v) for v in node]
+        return node
+    return walk(params)
 
 
 def _packed_config(cfg: CIMConfig) -> CIMConfig:
@@ -196,6 +255,11 @@ class DeployArtifact:
                 f"the backend that owns this hardware style before "
                 f"loading.") from None
         params = _ckpt.restore_tree(path, step=0)
+        if version < 4:
+            # older standard-pack artifacts load into the v4 in-memory
+            # layout (nibble planes + occupancy), bit-exact on serve
+            params = _migrate_pre_v4(params, cfg)
+            version = ARTIFACT_LAYOUT_VERSION
         if mesh is None:
             params = jax.tree.map(jnp.asarray, params)
         art = cls(kind=head["kind"], config=cfg, params=params,
@@ -290,9 +354,12 @@ def _pack_bank(node: Dict, nm: str, cfg: CIMConfig, vkey, variation_std,
             p, cfg, variation_key=k,
             variation_std=variation_std))(flat, keys)
     packed = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]), packed)
-    return {f"{nm}_digits": packed["w_digits"],
-            f"{nm}_k_logical": packed["k_logical"],
-            **{f"{nm}_{s}": packed[s] for s in _BANK_SCALES}}
+    out = {f"{nm}_digits": packed["w_digits"],
+           f"{nm}_k_logical": packed["k_logical"],
+           **{f"{nm}_{s}": packed[s] for s in _BANK_SCALES}}
+    if "w_occ" in packed:   # layout v4 standard pack; custom packs may omit
+        out[f"{nm}_occ"] = packed["w_occ"]
+    return out
 
 
 def pack_model(params: Dict, cfg: CIMConfig, *,

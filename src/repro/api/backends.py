@@ -136,6 +136,15 @@ def packers_for(cfg) -> Tuple[Callable, Callable]:
             b.pack_conv or _conv._pack_conv)
 
 
+def has_own_pack(cfg) -> bool:
+    """True when ``cfg``'s backend packs its own plane format (e.g.
+    ``binary``'s sign planes). Such planes keep dense storage: the v4
+    nibble/occupancy layout (``linear_specs``/``conv_specs`` shapes, the
+    artifact migration) applies only to the standard deploy pack."""
+    b = get_backend(cfg.mode)
+    return b.pack_linear is not None or b.pack_conv is not None
+
+
 def plane_bits(cfg) -> Tuple[int, int]:
     """(weight_bits, cell_bits) governing ``cfg``'s PACKED digit-plane
     geometry — the backend's ``plane_bits`` override when set (binary:

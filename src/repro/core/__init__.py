@@ -12,6 +12,8 @@ from .cim_conv import (calibrate_cim_conv, cim_conv2d, conv_dequant_muls,
 from .cim_linear import (CIMConfig, calibrate_cim, cim_linear, init_cim_linear,
                          pack_deploy)
 from .granularity import ArrayTiling, Granularity, conv_tiling, n_splits
+from .nibble import (can_pack_nibbles, is_nibble_packed, occupancy_map,
+                     pack_nibbles, stored_rows, unpack_nibbles)
 from .quantizer import (init_scale_from, lsq_fake_quant, lsq_integer, qrange,
                         round_ste)
 from .variation import (DriftSchedule, DriftState, apply_cell_variation,
@@ -21,12 +23,13 @@ from .variation import (DriftSchedule, DriftState, apply_cell_variation,
 __all__ = [
     "ArrayTiling", "CIMConfig", "DriftSchedule", "DriftState", "Granularity",
     "apply_cell_variation",
-    "calibrate_cim", "calibrate_cim_conv", "cim_conv2d", "cim_linear",
-    "conv_dequant_muls",
+    "calibrate_cim", "calibrate_cim_conv", "can_pack_nibbles", "cim_conv2d",
+    "cim_linear", "conv_dequant_muls",
     "conv_tiling", "drift_field", "drift_tree", "init_cim_conv",
-    "init_cim_linear", "init_scale_from",
-    "lsq_fake_quant", "lsq_integer", "n_splits", "pack_deploy",
-    "pack_deploy_conv", "path_fold_key", "perturb_digits", "perturb_packed",
+    "init_cim_linear", "init_scale_from", "is_nibble_packed",
+    "lsq_fake_quant", "lsq_integer", "n_splits", "occupancy_map",
+    "pack_deploy", "pack_deploy_conv", "pack_nibbles", "path_fold_key",
+    "perturb_digits", "perturb_packed",
     "place_values", "qrange", "recombine", "round_ste", "split_digits",
-    "variation_noise",
+    "stored_rows", "unpack_nibbles", "variation_noise",
 ]

@@ -40,6 +40,8 @@ from repro.obs import adc as obs_adc
 from .bitsplit import place_values, split_digits
 from .cim_linear import CIMConfig, _deprecated, _quantize_act, deploy_act_codes
 from .granularity import Granularity, conv_tiling
+from .nibble import (can_pack_nibbles, is_nibble_packed, occupancy_map,
+                     pack_nibbles)
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
 from .variation import perturb_packed, variation_noise, variation_wanted
 
@@ -239,8 +241,11 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
     from repro.nn.module import current_mesh
 
     d6 = params["w_digits"]              # (S, kt, kh, kw, cpa, C_out)
-    n_split, k_tiles, kh, kw, c_per_array, c_out = d6.shape
-    digits = d6.reshape(n_split, k_tiles, kh * kw * c_per_array, c_out)
+    n_split, k_tiles, kh, kw, cpa_stored, c_out = d6.shape
+    # uint8 planes are nibble-packed along cpa (repro.core.nibble): the
+    # stored channel-slice axis holds half the logical rows
+    c_per_array = 2 * cpa_stored if is_nibble_packed(d6) else cpa_stored
+    digits = d6.reshape(n_split, k_tiles, kh * kw * cpa_stored, c_out)
     if not variation_wanted(variation_key, sigma):
         variation_key = sigma = None
 
@@ -273,6 +278,7 @@ def _forward_conv_deploy(x, params, cfg: CIMConfig, stride, padding,
         use_kernel=cfg.use_kernel,
         variation_key=variation_key, variation_std=sigma,
         mesh=current_mesh(), adc_free=adc_free,
+        occ=params.get("w_occ"),
     )
     return y.astype(compute_dtype)
 
@@ -292,7 +298,13 @@ def _pack_conv(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
     ``variation_key``/``variation_std`` bake ONE log-normal device
     realization into the planes (float32); for Monte-Carlo sweeps keep
     the planes clean and use ``perturb_packed``/the forward's
-    ``variation_key`` instead (no re-packing per sample)."""
+    ``variation_key`` instead (no re-packing per sample).
+
+    Layout v4 extras (DESIGN.md §14): ``w_occ`` — per-(split, array tile,
+    output channel) uint8 occupancy over the (kh, kw, cpa) cell block —
+    and, for ``pack_dtype='int4'`` with an even ``c_per_array``,
+    half-split nibble packing of the cpa axis (two digits per uint8
+    byte, ``repro.core.nibble``)."""
     kh, kw, c_in, c_out = params["w"].shape
     t, cpa = conv_tiling(kh, kw, c_in, c_out, cfg.array_rows, cfg.array_cols,
                          cfg.weight_bits, cfg.cell_bits)
@@ -304,8 +316,13 @@ def _pack_conv(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
     d = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, c_pad), (0, 0)))
     d = d.reshape(n_split, kh, kw, t.k_tiles, cpa, c_out)
     d = jnp.transpose(d, (0, 3, 1, 2, 4, 5))     # (S, kt, kh, kw, cpa, co)
+    d = d.astype(cfg.store_dtype())
+    occ = occupancy_map(d, conv=True)
+    if can_pack_nibbles(cpa, cfg.store_dtype()):
+        d = pack_nibbles(d)                      # cpa axis, two per byte
     out = {
-        "w_digits": d.astype(cfg.store_dtype()),
+        "w_digits": d,
+        "w_occ": occ,
         "s_w": params["s_w"],
         "s_p": params["s_p"],
         "s_a": params["s_a"],

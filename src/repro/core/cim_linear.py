@@ -34,6 +34,8 @@ from repro.obs import adc as obs_adc
 
 from .bitsplit import place_values, split_digits
 from .granularity import ArrayTiling, Granularity
+from .nibble import (can_pack_nibbles, is_nibble_packed, occupancy_map,
+                     pack_nibbles)
 from .quantizer import init_scale_from, lsq_fake_quant, qrange
 from .variation import perturb_digits, perturb_packed, variation_wanted
 
@@ -351,7 +353,9 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype,
     a_int = deploy_act_codes(x, s_a, cfg)
     # logical K from the activation; tiling geometry from the digit planes
     t = cfg.tiling(x.shape[-1], digits.shape[-1])
-    assert t.k_tiles == digits.shape[1] and t.array_rows == digits.shape[2], \
+    rows_stored = (t.array_rows // 2 if is_nibble_packed(digits)
+                   else t.array_rows)    # uint8 planes: half-split pack
+    assert t.k_tiles == digits.shape[1] and rows_stored == digits.shape[2], \
         (t.k_tiles, t.array_rows, digits.shape)
     a_t = _tile_inputs(a_int, t)
 
@@ -370,6 +374,7 @@ def _forward_deploy(x, params, cfg, variation_key, sigma, compute_dtype,
         use_kernel=cfg.use_kernel,
         variation_key=variation_key, variation_std=sigma,
         mesh=current_mesh(), adc_free=adc_free,
+        occ=params.get("w_occ"),
     )
     return y.astype(compute_dtype)
 
@@ -391,14 +396,24 @@ def _pack_linear(params: Dict[str, jnp.ndarray], cfg: CIMConfig, *,
     realization into the packed planes (float32) — useful to freeze a
     specific chip's noise. For Monte-Carlo sweeps keep the planes clean
     and perturb lazily per sample instead: ``perturb_packed(packed, key,
-    sigma, sample=i)`` or the ``variation_key`` forward argument."""
+    sigma, sample=i)`` or the ``variation_key`` forward argument.
+
+    Layout v4 extras (DESIGN.md §14): ``w_occ`` — a per-(split, array
+    tile, column) uint8 occupancy map the deploy kernels use to skip
+    all-zero digit planes bit-exactly — and, for ``pack_dtype='int4'``
+    with an even array-row count, half-split nibble packing of the
+    planes (two digits per uint8 byte, ``repro.core.nibble``)."""
     k, n = params["w"].shape
     t = cfg.tiling(k, n)
     w_int = _quantize_weight_int(params, cfg, t)
     digits = split_digits(w_int, cfg.weight_bits, cfg.cell_bits)
     d_t = _tile_digits(digits, t).astype(cfg.store_dtype())
+    occ = occupancy_map(d_t)
+    if can_pack_nibbles(t.array_rows, cfg.store_dtype()):
+        d_t = pack_nibbles(d_t)
     out = {
         "w_digits": d_t,
+        "w_occ": occ,
         "s_w": params["s_w"],
         "s_p": params["s_p"],
         "s_a": params["s_a"],

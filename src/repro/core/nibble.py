@@ -1,0 +1,116 @@
+"""Packed int4 nibble planes + per-(tile, column) plane occupancy.
+
+Two storage-level levers the deploy kernels exploit (DESIGN.md §14):
+
+**Nibble packing.** ``pack_dtype='int4'`` digit planes historically stored
+int4 but *streamed* int8 (the kernel wrappers upcast before the
+pallas_call), so HBM traffic on the decode path paid the full byte. Here
+two 4-bit two's-complement digits pack into one uint8 along the plane's
+row axis (axis -2) and the kernels decode them in VMEM — plane bytes on
+the wire halve. The pairing is a **half-split**: row ``r`` of the packed
+plane holds digit row ``r`` in its low nibble and digit row ``r + rows/2``
+in its high nibble, so in-kernel decode is two shifts plus one
+concatenate — no interleave. Only even row counts pack (odd counts keep
+the dense int4 storage; the variation-noise contract draws noise over the
+*logical* plane shape, which an odd-row pack could not reconstruct
+without side-channel metadata).
+
+``uint8`` is the discriminator: digit planes are otherwise int8 / int4 /
+float32 (variation-baked), so a uint8 ``w_digits`` leaf always means
+nibble-packed. The packed axis is always -2 — ``rows`` for linear
+(S, kt, rows, N) planes, ``c_per_array`` for conv 6-D
+(S, kt, kh, kw, cpa, C_out) planes — which keeps the trailing
+column-shard axis untouched: shard boundaries stay byte-aligned for free.
+
+**Occupancy.** ``occupancy_map`` reduces a digit plane to one byte per
+(split, array tile, column) saying whether ANY cell in that column tile
+is nonzero. The kernels skip the MACs of unoccupied planes; under the
+sign ADC (psum_bits == 1) a skipped all-zero plane still contributes
+``+s_p * deq`` on the dense path (psum 0 quantizes to +1), so the sparse
+kernels fold exactly that compensation term in — sparse-skip output is
+bit-exact with dense (tests/test_sparse_skip.py pins the grid).
+Multiplicative cell variation keeps zeros zero, so an occupancy map
+computed from clean digits stays valid under any noise realization.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Storage dtype of nibble-packed digit planes — and their discriminator:
+#: no other digit-plane storage uses uint8.
+NIBBLE_DTYPE = jnp.uint8
+
+
+def is_nibble_packed(planes) -> bool:
+    """True when a digit-plane leaf is nibble-packed (uint8 storage)."""
+    return jnp.dtype(planes.dtype) == jnp.dtype(NIBBLE_DTYPE)
+
+
+def can_pack_nibbles(rows: int, store_dtype) -> bool:
+    """Nibble packing applies iff the storage grid is int4 and the packed
+    (row) axis is even — odd axes would need an extra metadata row to
+    reconstruct the logical shape the variation noise is drawn over."""
+    return jnp.dtype(store_dtype) == jnp.dtype(jnp.int4) and rows % 2 == 0
+
+
+def stored_rows(rows: int, store_dtype):
+    """(stored row count, storage dtype) of a digit plane's packed axis —
+    the shape rule ``linear_specs``/``conv_specs``/the packers share."""
+    if can_pack_nibbles(rows, store_dtype):
+        return rows // 2, NIBBLE_DTYPE
+    return rows, store_dtype
+
+
+def pack_nibbles(planes: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4-valued digit planes two-per-byte along axis -2.
+
+    planes: (..., rows, N) integer-valued digits in [-8, 7], rows even.
+    Returns (..., rows // 2, N) uint8 — row ``r`` carries digit row ``r``
+    (low nibble) and digit row ``r + rows // 2`` (high nibble), both as
+    4-bit two's complement."""
+    rows = planes.shape[-2]
+    if rows % 2:
+        raise ValueError(f"nibble packing needs an even packed axis, "
+                         f"got {rows} (shape {planes.shape})")
+    x = planes.astype(jnp.int32)
+    lo, hi = jnp.split(x, 2, axis=-2)
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(NIBBLE_DTYPE)
+
+
+def unpack_nibbles(packed: jnp.ndarray, *, groups: int = 1) -> jnp.ndarray:
+    """Invert ``pack_nibbles``: (..., rows_p, N) uint8 -> (..., 2*rows_p, N)
+    int8 digits in [-8, 7].
+
+    ``groups``: the packed axis holds ``groups`` independently-packed
+    blocks. The canonical layouts always pack with groups=1 (linear rows,
+    conv ``c_per_array``); the conv kernels see the 6-D plane *flattened*
+    to (S, kt, kh*kw*cpa_p, C_out), where each of the kh*kw taps is its
+    own packed block — unpacking there needs ``groups=kh*kw`` to restore
+    the (dh, dw, c) row order ``extract_conv_patches`` produces."""
+    rows_p = packed.shape[-2]
+    if rows_p % groups:
+        raise ValueError(f"packed axis {rows_p} not divisible by "
+                         f"groups={groups}")
+    x = packed.astype(jnp.int32)
+    lo = ((x & 0xF) ^ 8) - 8            # 4-bit two's complement decode
+    hi = ((x >> 4) ^ 8) - 8
+    lead = packed.shape[:-2]
+    gh = rows_p // groups
+    n = packed.shape[-1]
+    lo = lo.reshape(lead + (groups, gh, n))
+    hi = hi.reshape(lead + (groups, gh, n))
+    out = jnp.concatenate([lo, hi], axis=-2)
+    return out.reshape(lead + (2 * rows_p, n)).astype(jnp.int8)
+
+
+def occupancy_map(planes: jnp.ndarray, *, conv: bool = False) -> jnp.ndarray:
+    """Per-(split, array tile, column) plane occupancy, uint8 {0, 1}.
+
+    planes: *logical* (un-nibbled) digit planes — linear (..., S, kt,
+    rows, N) or conv (..., S, kt, kh, kw, cpa, C_out) with ``conv=True``.
+    A column tile is occupied iff any of its cells is nonzero; the deploy
+    kernels skip the MACs of unoccupied planes (compensating the sign
+    ADC's zero-plane output, see module docstring). Returns (..., S, kt,
+    N) / (..., S, kt, C_out)."""
+    axes = (-4, -3, -2) if conv else (-2,)
+    return jnp.any(planes != 0, axis=axes).astype(jnp.uint8)

@@ -207,11 +207,22 @@ def perturb_packed(packed: Dict[str, jnp.ndarray], key: jax.Array,
     a Monte-Carlo sample index into ``key`` (``jax.random.fold_in``), so a
     sweep is keyed by one base key + sample number. Works for linear
     (4-D) and conv (6-D) packed planes alike.
+
+    Nibble-packed (uint8) planes are decoded to their logical layout
+    first — the noise contract (DESIGN.md §8) draws over the LOGICAL
+    plane shape, so a nibble-packed and a dense artifact perturb the
+    same physical cell from the same key. Any ``w_occ`` map passes
+    through unchanged: multiplicative noise keeps zero cells zero, so
+    clean-digit occupancy stays valid for every realization.
     """
     if sample is not None:
         key = jax.random.fold_in(key, sample)
     out = dict(packed)
-    out["w_digits"] = perturb_digits(packed["w_digits"], key, sigma)
+    d = packed["w_digits"]
+    if jnp.dtype(d.dtype) == jnp.dtype(jnp.uint8):
+        from .nibble import unpack_nibbles  # lazy: keeps module load light
+        d = unpack_nibbles(d)
+    out["w_digits"] = perturb_digits(d, key, sigma)
     return out
 
 

@@ -115,7 +115,13 @@ class ScaleDelta:
 
 def _row_flat(planes: jnp.ndarray) -> jnp.ndarray:
     """Packed planes -> (lead?, S, kt, R, N) float32, rows flattened
-    row-major (identical order on the 4-D linear and 6-D conv layouts)."""
+    row-major (identical order on the 4-D linear and 6-D conv layouts).
+    Nibble-packed (uint8) planes decode to their logical layout first, so
+    a pristine v4 reference fits against float observed planes (drifted
+    planes are always logical — ``perturb_packed`` unpacks)."""
+    if jnp.dtype(planes.dtype) == jnp.dtype(jnp.uint8):
+        from repro.core.nibble import unpack_nibbles
+        planes = unpack_nibbles(planes)
     lead = 1 if planes.ndim in (5, 7) else 0
     shape = planes.shape
     rows = int(np.prod(shape[lead + 2:-1]))

@@ -36,12 +36,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.nibble import unpack_nibbles
 from repro.core.variation import perturb_digits, variation_wanted
 
+from .cim_matmul import decode_digit_block
 from .ref import extract_conv_patches
 
 
-def _kernel(a_ref, d_ref, deq_ref, o_ref):
+def _kernel(a_ref, d_ref, deq_ref, o_ref, *, nibble: bool = False,
+            groups: int = 1):
     s = pl.program_id(2)
     t = pl.program_id(3)
 
@@ -50,7 +53,7 @@ def _kernel(a_ref, d_ref, deq_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = a_ref[:, 0, :].astype(jnp.float32)          # (bm, rows)
-    d = d_ref[0, 0].astype(jnp.float32)             # (rows, bn)
+    d = decode_digit_block(d_ref[0, 0], nibble=nibble, groups=groups)
     p = jnp.dot(a, d, preferred_element_type=jnp.float32)  # (bm, bn)
     # digital accumulation: snap the integer-valued MACs (kills float
     # roundoff, matching the ADC kernel's pre-quantize snap) and add the
@@ -60,17 +63,47 @@ def _kernel(a_ref, d_ref, deq_ref, o_ref):
     o_ref[...] += p * deq[None, :]
 
 
+def _kernel_sparse(a_ref, d_ref, occ_ref, deq_ref, o_ref, *,
+                   nibble: bool = False, groups: int = 1):
+    """Occupancy-aware ADC-free body: a (bn-column) block whose digit
+    planes are ALL unoccupied skips the MAC entirely; any occupied column
+    makes the block run the verbatim dense body (per-column masking
+    between multiply and accumulate perturbs XLA fusion at 1 ulp). No
+    compensation exists here (unlike the sign-ADC case): an all-zero
+    plane's exact digital psum is 0, so the dense path adds +0.0 and the
+    skip adds nothing — bit-identical on a +0.0-initialized f32
+    accumulator (round-to-nearest never produces -0.0 from +0.0)."""
+    s = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(t == 0, s == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    occ = occ_ref[0, 0, :]                          # (bn,) uint8
+
+    @pl.when(jnp.any(occ > 0))
+    def _mac():
+        a = a_ref[:, 0, :].astype(jnp.float32)
+        d = decode_digit_block(d_ref[0, 0], nibble=nibble, groups=groups)
+        p = jnp.round(jnp.dot(a, d, preferred_element_type=jnp.float32))
+        deq = deq_ref[0, 0, :].astype(jnp.float32)
+        o_ref[...] += p * deq[None, :]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "interpret"),
+    static_argnames=("nibble_groups", "block_m", "block_n", "interpret"),
 )
 def cim_matmul_adc_free_pallas(
     a_t: jnp.ndarray,      # (M, k_tiles, rows) integer-valued
-    digits: jnp.ndarray,   # (S, k_tiles, rows, N)
+    digits: jnp.ndarray,   # (S, k_tiles, rows, N); uint8 = nibble-packed
     deq: jnp.ndarray,      # (S, k_tiles, N) fused dequant scales
     variation_key=None,    # optional PRNG key: one MC device realization
     variation_std=None,    # log-normal sigma (float or traced scalar)
+    occ=None,              # optional (S, k_tiles, N) uint8 occupancy map
     *,
+    nibble_groups: int = 1,
     block_m: int = 128,
     block_n: int = 128,
     interpret: bool = False,
@@ -80,13 +113,20 @@ def cim_matmul_adc_free_pallas(
     Same operands as ``cim_matmul_pallas`` minus ``s_p`` (no ADC scale
     stream exists on this hardware style). Returns (M, N) float32.
     """
+    nibble = digits.dtype == jnp.uint8   # nibble-packed HBM planes (§14)
     if variation_wanted(variation_key, variation_std):
         # perturb BEFORE block padding: noise indices must match the
-        # packed (unpadded) layout the emulate path perturbs (§8)
+        # packed (unpadded) LOGICAL layout the emulate path perturbs (§8)
+        if nibble:
+            digits = unpack_nibbles(digits, groups=nibble_groups)
+            nibble = False
         digits = perturb_digits(digits, variation_key, variation_std)
     m, k_tiles, rows = a_t.shape
     n_split = digits.shape[0]
     n = digits.shape[-1]
+    rows_d = digits.shape[2]             # stored rows: rows/2 when nibble
+    assert rows_d == (rows // 2 if nibble else rows), \
+        (digits.shape, a_t.shape, nibble)
 
     bm = min(block_m, m)
     bn = min(block_n, n)
@@ -97,6 +137,8 @@ def cim_matmul_adc_free_pallas(
     if pad_n:
         digits = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
         deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad_n)))
+        if occ is not None:
+            occ = jnp.pad(occ, ((0, 0), (0, 0), (0, pad_n)))  # dead: skip
     mp, np_ = m + pad_m, n + pad_n
 
     # reduction dims (s outer, t inner): the digital accumulator adds the
@@ -106,18 +148,27 @@ def cim_matmul_adc_free_pallas(
     # reassociation here is visible at 1 ulp and amplifies through the
     # next layer's activation-code rounding at model scale
     grid = (mp // bm, np_ // bn, n_split, k_tiles)
+    col_spec = pl.BlockSpec((1, 1, bn), lambda i, j, s, t: (s, t, j))
+    in_specs = [
+        pl.BlockSpec((bm, 1, rows), lambda i, j, s, t: (i, t, 0)),
+        pl.BlockSpec((1, 1, rows_d, bn), lambda i, j, s, t: (s, t, 0, j)),
+    ]
+    if occ is None:
+        body = _kernel
+        args = (a_t, digits, deq)
+    else:
+        body = _kernel_sparse
+        args = (a_t, digits, occ.astype(jnp.uint8), deq)
+        in_specs.append(col_spec)
+    in_specs.append(col_spec)
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(body, nibble=nibble, groups=nibble_groups),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, 1, rows), lambda i, j, s, t: (i, t, 0)),
-            pl.BlockSpec((1, 1, rows, bn), lambda i, j, s, t: (s, t, 0, j)),
-            pl.BlockSpec((1, 1, bn), lambda i, j, s, t: (s, t, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(a_t, digits, deq)
+    )(*args)
     return out[:m, :n]
 
 
@@ -128,10 +179,11 @@ def cim_matmul_adc_free_pallas(
 )
 def cim_conv_adc_free_pallas(
     a_int: jnp.ndarray,    # (B, H, W, C_in) integer-valued codes
-    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out)
+    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out); uint8 = nibble
     deq: jnp.ndarray,      # (S, k_tiles, C_out)
     variation_key=None,
     variation_std=None,
+    occ=None,              # optional (S, k_tiles, C_out) occupancy map
     *,
     kh: int,
     kw: int,
@@ -148,14 +200,20 @@ def cim_conv_adc_free_pallas(
 
     Returns (B, H', W', C_out) float32.
     """
-    n_split, k_tiles, rows, n = digits.shape
-    assert rows == kh * kw * c_per_array, (rows, kh, kw, c_per_array)
+    n_split, k_tiles, rows_d, n = digits.shape
+    rows = kh * kw * c_per_array           # logical rows, from the geometry
+    nibble = digits.dtype == jnp.uint8
+    assert rows_d == (rows // 2 if nibble else rows), \
+        (digits.shape, kh, kw, c_per_array, nibble)
     a_t = extract_conv_patches(a_int, kh, kw, stride, padding, k_tiles,
                                c_per_array)
     b, ho, wo = a_t.shape[:3]
     out = cim_matmul_adc_free_pallas(
         a_t.reshape(b * ho * wo, k_tiles, rows),
-        digits, deq, variation_key, variation_std,
+        digits, deq, variation_key, variation_std, occ,
+        # each of the kh*kw taps is its own packed nibble block in the
+        # flattened row layout (repro.core.nibble)
+        nibble_groups=kh * kw,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     return out.reshape(b, ho, wo, n)

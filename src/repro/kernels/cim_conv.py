@@ -59,11 +59,12 @@ from .ref import extract_conv_patches
 )
 def cim_conv_pallas(
     a_int: jnp.ndarray,    # (B, H, W, C_in) integer-valued codes
-    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out)
+    digits: jnp.ndarray,   # (S, k_tiles, kh*kw*cpa, C_out); uint8 = nibble
     s_p: jnp.ndarray,      # (S, k_tiles, C_out)
     deq: jnp.ndarray,      # (S, k_tiles, C_out)
     variation_key=None,    # optional PRNG key: one MC device realization
     variation_std=None,    # log-normal sigma (float or traced scalar)
+    occ=None,              # optional (S, k_tiles, C_out) occupancy map
     *,
     kh: int,
     kw: int,
@@ -80,15 +81,21 @@ def cim_conv_pallas(
 
     Returns (B, H', W', C_out) float32.
     """
-    n_split, k_tiles, rows, n = digits.shape
-    assert rows == kh * kw * c_per_array, (rows, kh, kw, c_per_array)
+    n_split, k_tiles, rows_d, n = digits.shape
+    rows = kh * kw * c_per_array           # logical rows, from the geometry
+    nibble = digits.dtype == jnp.uint8
+    assert rows_d == (rows // 2 if nibble else rows), \
+        (digits.shape, kh, kw, c_per_array, nibble)
     a_t = extract_conv_patches(a_int, kh, kw, stride, padding, k_tiles,
                                c_per_array)
     b, ho, wo = a_t.shape[:3]
     out = cim_matmul_pallas(
         a_t.reshape(b * ho * wo, k_tiles, rows),
-        digits, s_p, deq, variation_key, variation_std,
+        digits, s_p, deq, variation_key, variation_std, occ,
         psum_bits=psum_bits, psum_quant=psum_quant,
+        # each of the kh*kw taps is its own packed nibble block in the
+        # flattened row layout (repro.core.nibble)
+        nibble_groups=kh * kw,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     return out.reshape(b, ho, wo, n)

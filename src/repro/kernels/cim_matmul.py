@@ -52,11 +52,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.nibble import unpack_nibbles
 from repro.core.variation import perturb_digits, variation_wanted
 
 
+def decode_digit_block(d, *, nibble: bool, groups: int) -> jnp.ndarray:
+    """VMEM digit-block decode shared by the deploy kernel bodies.
+
+    ``d``: a (rows_stored, bn) block — uint8 nibble pairs when ``nibble``
+    (rows_stored = rows / 2, half-split pairing per group along the row
+    axis; ``repro.core.nibble``), else int8/int4/float digits. Returns
+    (rows, bn) float32."""
+    if nibble:
+        d = unpack_nibbles(d, groups=groups)
+    return d.astype(jnp.float32)
+
+
+def _adc_quantize(p, sp_ref, *, psum_bits: int):
+    sp = jnp.maximum(sp_ref[0, 0, :].astype(jnp.float32), 1e-9)  # (bn,)
+    if psum_bits == 1:
+        return jnp.where(p >= 0, 1.0, -1.0) * sp[None, :]
+    qn = float(-(2 ** (psum_bits - 1)))
+    qp = float(2 ** (psum_bits - 1) - 1)
+    return jnp.clip(jnp.round(p / sp[None, :]), qn, qp) * sp[None, :]
+
+
 def _kernel(a_ref, d_ref, sp_ref, deq_ref, o_ref, *, psum_bits: int,
-            psum_quant: bool):
+            psum_quant: bool, nibble: bool = False, groups: int = 1):
     t = pl.program_id(2)
     s = pl.program_id(3)
 
@@ -65,49 +87,108 @@ def _kernel(a_ref, d_ref, sp_ref, deq_ref, o_ref, *, psum_bits: int,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = a_ref[:, 0, :].astype(jnp.float32)          # (bm, rows)
-    d = d_ref[0, 0].astype(jnp.float32)             # (rows, bn)
+    d = decode_digit_block(d_ref[0, 0], nibble=nibble, groups=groups)
     p = jnp.dot(a, d, preferred_element_type=jnp.float32)  # (bm, bn) column MACs
 
     if psum_quant:
         p = jnp.round(p)    # integer-valued MACs: kill float roundoff
-        sp = jnp.maximum(sp_ref[0, 0, :].astype(jnp.float32), 1e-9)  # (bn,)
-        if psum_bits == 1:
-            p = jnp.where(p >= 0, 1.0, -1.0) * sp[None, :]
-        else:
-            qn = float(-(2 ** (psum_bits - 1)))
-            qp = float(2 ** (psum_bits - 1) - 1)
-            p = jnp.clip(jnp.round(p / sp[None, :]), qn, qp) * sp[None, :]
+        p = _adc_quantize(p, sp_ref, psum_bits=psum_bits)
 
     deq = deq_ref[0, 0, :].astype(jnp.float32)      # (bn,)
     o_ref[...] += p * deq[None, :]
 
 
+def _kernel_sparse(a_ref, d_ref, occ_ref, sp_ref, deq_ref, o_ref, *,
+                   psum_bits: int, psum_quant: bool, nibble: bool = False,
+                   groups: int = 1):
+    """Occupancy-aware variant: ``occ_ref`` carries one byte per (split,
+    array tile, column) — 0 means every cell of that column's digit plane
+    is zero. A (bn-column) block whose planes are ALL unoccupied skips
+    the MAC + ADC stage entirely; a block with any occupied column runs
+    the **verbatim dense body** (no per-column masking — a mask between
+    the multiply and the accumulate changes XLA's fusion and costs 1-ulp
+    drift). Bit-exact with ``_kernel`` on the same operands
+    (tests/test_sparse_skip.py):
+
+      * under the sign ADC (psum_bits == 1) a zero plane still drives the
+        dense path's comparator to +1, contributing ``+s_p * deq`` — the
+        skipped-block branch reproduces that through the SAME expression
+        graph as the dense body, with the dot replaced by its known
+        result (+0.0), so compiler fusion cannot diverge;
+      * for psum_bits > 1 (and psum_quant=False) a zero plane quantizes
+        to 0 and contributes +0.0, which the skip reproduces because the
+        f32 accumulator can never hold -0.0 (init is +0.0 and round-to-
+        nearest never produces -0.0 from a +0.0 starting point).
+    """
+    t = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(t == 0, s == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    occ = occ_ref[0, 0, :]                          # (bn,) uint8
+    occupied = jnp.any(occ > 0)
+
+    @pl.when(occupied)
+    def _mac():
+        a = a_ref[:, 0, :].astype(jnp.float32)
+        d = decode_digit_block(d_ref[0, 0], nibble=nibble, groups=groups)
+        p = jnp.dot(a, d, preferred_element_type=jnp.float32)
+        if psum_quant:
+            p = jnp.round(p)
+            p = _adc_quantize(p, sp_ref, psum_bits=psum_bits)
+        deq = deq_ref[0, 0, :].astype(jnp.float32)
+        o_ref[...] += p * deq[None, :]
+
+    if psum_quant and psum_bits == 1:
+        # sign-ADC compensation for fully skipped blocks: the zero
+        # plane's psum (+0.0) quantizes to +s_p on the dense path
+        @pl.when(jnp.logical_not(occupied))
+        def _comp():
+            p = _adc_quantize(jnp.zeros(o_ref.shape, jnp.float32), sp_ref,
+                              psum_bits=psum_bits)
+            deq = deq_ref[0, 0, :].astype(jnp.float32)
+            o_ref[...] += p * deq[None, :]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("psum_bits", "psum_quant", "block_m", "block_n",
-                     "interpret"),
+    static_argnames=("psum_bits", "psum_quant", "nibble_groups", "block_m",
+                     "block_n", "interpret"),
 )
 def cim_matmul_pallas(
     a_t: jnp.ndarray,      # (M, k_tiles, rows) integer-valued
-    digits: jnp.ndarray,   # (S, k_tiles, rows, N)
+    digits: jnp.ndarray,   # (S, k_tiles, rows, N); uint8 = nibble-packed
     s_p: jnp.ndarray,      # (S, k_tiles, N)
     deq: jnp.ndarray,      # (S, k_tiles, N)
     variation_key=None,    # optional PRNG key: one MC device realization
     variation_std=None,    # log-normal sigma (float or traced scalar)
+    occ=None,              # optional (S, k_tiles, N) uint8 occupancy map
     *,
     psum_bits: int,
     psum_quant: bool = True,
+    nibble_groups: int = 1,
     block_m: int = 128,
     block_n: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    nibble = digits.dtype == jnp.uint8   # nibble-packed HBM planes (§14)
     if variation_wanted(variation_key, variation_std):
         # perturb BEFORE block padding: noise indices must match the
-        # packed (unpadded) layout the emulate path perturbs (§8)
+        # packed (unpadded) LOGICAL layout the emulate path perturbs (§8)
+        # — nibble planes decode to that layout first, so a packed and a
+        # dense artifact draw identical noise from the same key
+        if nibble:
+            digits = unpack_nibbles(digits, groups=nibble_groups)
+            nibble = False
         digits = perturb_digits(digits, variation_key, variation_std)
     m, k_tiles, rows = a_t.shape
     n_split = digits.shape[0]
     n = digits.shape[-1]
+    rows_d = digits.shape[2]             # stored rows: rows/2 when nibble
+    assert rows_d == (rows // 2 if nibble else rows), \
+        (digits.shape, a_t.shape, nibble)
 
     bm = min(block_m, m)
     bn = min(block_n, n)
@@ -119,22 +200,33 @@ def cim_matmul_pallas(
         digits = jnp.pad(digits, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
         s_p = jnp.pad(s_p, ((0, 0), (0, 0), (0, pad_n)), constant_values=1.0)
         deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad_n)))
+        if occ is not None:
+            occ = jnp.pad(occ, ((0, 0), (0, 0), (0, pad_n)))  # dead: skip
     mp, np_ = m + pad_m, n + pad_n
 
     grid = (mp // bm, np_ // bn, k_tiles, n_split)
+    col_spec = pl.BlockSpec((1, 1, bn), lambda i, j, t, s: (s, t, j))
+    in_specs = [
+        pl.BlockSpec((bm, 1, rows), lambda i, j, t, s: (i, t, 0)),
+        pl.BlockSpec((1, 1, rows_d, bn), lambda i, j, t, s: (s, t, 0, j)),
+    ]
+    if occ is None:
+        body = _kernel
+        args = (a_t, digits, s_p, deq)
+    else:
+        body = _kernel_sparse
+        args = (a_t, digits, occ.astype(jnp.uint8), s_p, deq)
+        in_specs.append(col_spec)        # occupancy rides a scale-like spec
+    in_specs += [col_spec, col_spec]
     out = pl.pallas_call(
-        functools.partial(_kernel, psum_bits=psum_bits, psum_quant=psum_quant),
+        functools.partial(body, psum_bits=psum_bits, psum_quant=psum_quant,
+                          nibble=nibble, groups=nibble_groups),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, 1, rows), lambda i, j, t, s: (i, t, 0)),
-            pl.BlockSpec((1, 1, rows, bn), lambda i, j, t, s: (s, t, 0, j)),
-            pl.BlockSpec((1, 1, bn), lambda i, j, t, s: (s, t, j)),
-            pl.BlockSpec((1, 1, bn), lambda i, j, t, s: (s, t, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(a_t, digits, s_p, deq)
+    )(*args)
     return out[:m, :n]
 
 

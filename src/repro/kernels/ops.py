@@ -38,6 +38,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.nibble import unpack_nibbles
 from repro.core.variation import perturb_digits, variation_wanted
 from repro.obs import adc as obs_adc
 
@@ -63,23 +64,28 @@ def col_shards(mesh, mesh_axis: str = COL_SHARD_AXIS) -> int:
     return int(mesh.shape[mesh_axis])
 
 
-def pad_cols(digits, s_p, deq, n_shards: int):
+def pad_cols(digits, s_p, deq, n_shards: int, occ=None):
     """Pad the packed column axis to a multiple of ``n_shards``.
 
-    Dead columns get digit 0, psum scale 1 and dequant scale 0 — exactly
-    the kernel's last-block padding rule — so they contribute nothing and
-    are sliced off after the output gather."""
+    Dead columns get digit 0, psum scale 1, dequant scale 0 and occupancy
+    0 — exactly the kernel's last-block padding rule — so they contribute
+    nothing (the sparse kernels skip them outright) and are sliced off
+    after the output gather. Digit planes pad the same way whether dense
+    or nibble-packed: the column axis is never the packed axis, so shard
+    boundaries stay byte-aligned."""
     n = digits.shape[-1]
     pad = (-n) % n_shards
     if pad:
         digits = jnp.pad(digits, [(0, 0)] * (digits.ndim - 1) + [(0, pad)])
         s_p = jnp.pad(s_p, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
         deq = jnp.pad(deq, ((0, 0), (0, 0), (0, pad)))
-    return digits, s_p, deq
+        if occ is not None:
+            occ = jnp.pad(occ, ((0, 0), (0, 0), (0, pad)))
+    return digits, s_p, deq, occ
 
 
 def _record_saturation(a2, digits, s_p, *, psum_bits, variation_key,
-                       variation_std):
+                       variation_std, nibble_groups: int = 1):
     """ADC saturation side-output for the fused paths (armed only).
 
     The deploy kernel never materializes partial sums, so the armed
@@ -88,7 +94,9 @@ def _record_saturation(a2, digits, s_p, *, psum_bits, variation_key,
     kernel actually multiplied — and ships per-column clipped counts
     host-side. Nothing here feeds the main output."""
     d = digits
-    if d.dtype == jnp.int4:
+    if d.dtype == jnp.uint8:
+        d = unpack_nibbles(d, groups=nibble_groups)
+    elif d.dtype == jnp.int4:
         d = d.astype(jnp.int8)
     if variation_wanted(variation_key, variation_std):
         d = perturb_digits(d, variation_key, variation_std)
@@ -101,58 +109,76 @@ def _record_saturation(a2, digits, s_p, *, psum_bits, variation_key,
 def _cim_matmul_sharded(
     a2, digits, s_p, deq, mesh, mesh_axis, *,
     psum_bits, psum_quant, use_kernel, block_m, block_n,
-    variation_key, variation_std, adc_free=False,
+    variation_key, variation_std, adc_free=False, occ=None,
+    nibble_groups=1,
 ):
     """Column-parallel CIM matmul: one kernel shard per device.
 
-    a2 (M, k_tiles, rows) is replicated; digits/s_p/deq shard over their
-    last (column) axis. No partial sum crosses a device boundary — the
-    reduction dims (array tile, bit-split) live inside each shard's grid —
-    so the single collective is the all-gather of (M, N/D) f32 outputs.
+    a2 (M, k_tiles, rows) is replicated; digits/s_p/deq (and the optional
+    occupancy map) shard over their last (column) axis. Nibble-packed
+    uint8 planes stream through shard_map at their packed byte width —
+    the column axis is never the packed axis, so shard boundaries are
+    byte-aligned by construction. No partial sum crosses a device
+    boundary — the reduction dims (array tile, bit-split) live inside
+    each shard's grid — so the single collective is the all-gather of
+    (M, N/D) f32 outputs.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.nn.module import shard_map  # lazy: avoids import cycle
 
     if digits.dtype == jnp.int4:
-        # int4 is the HBM storage dtype; shard boundaries are byte-aligned
+        # dense int4 is a legacy HBM storage dtype; the kernel loads int8
         digits = digits.astype(jnp.int8)
     if variation_wanted(variation_key, variation_std):
-        # full unpadded packed layout, BEFORE shard padding: same noise
-        # indices as the single-device paths (DESIGN.md §8, §10)
+        # full unpadded packed LOGICAL layout, BEFORE shard padding: same
+        # noise indices as the single-device paths (DESIGN.md §8, §10)
+        if digits.dtype == jnp.uint8:
+            digits = unpack_nibbles(digits, groups=nibble_groups)
         digits = perturb_digits(digits, variation_key, variation_std)
+    if not use_kernel and digits.dtype == jnp.uint8:
+        # the jnp oracles consume logical planes only
+        digits = unpack_nibbles(digits, groups=nibble_groups)
     n = digits.shape[-1]
     n_shards = mesh.shape[mesh_axis]
-    digits, s_p, deq = pad_cols(digits, s_p, deq, n_shards)
+    digits, s_p, deq, occ = pad_cols(digits, s_p, deq, n_shards, occ)
     interp = not _on_tpu()
 
-    def local(a_, d_, sp_, dq_):
+    def local(a_, d_, sp_, dq_, *rest):
+        occ_ = rest[0] if rest else None
         if adc_free:
             # ADC-free style (DESIGN.md §13): no s_p stream — sp_ rides
             # the shard_map signature so the specs stay uniform, unused
             if use_kernel:
                 out = cim_matmul_adc_free_pallas(
-                    a_, d_, dq_, block_m=block_m, block_n=block_n,
-                    interpret=interp)
+                    a_, d_, dq_, None, None, occ_,
+                    nibble_groups=nibble_groups,
+                    block_m=block_m, block_n=block_n, interpret=interp)
             else:
                 out = ref.cim_matmul_adc_free_ref(a_, d_, dq_)
         elif use_kernel:
             out = cim_matmul_pallas(
-                a_, d_, sp_, dq_, psum_bits=psum_bits,
-                psum_quant=psum_quant, block_m=block_m, block_n=block_n,
-                interpret=interp)
+                a_, d_, sp_, dq_, None, None, occ_,
+                psum_bits=psum_bits, psum_quant=psum_quant,
+                nibble_groups=nibble_groups,
+                block_m=block_m, block_n=block_n, interpret=interp)
         else:
             out = ref.cim_matmul_ref(a_, d_, sp_, dq_, psum_bits=psum_bits,
                                      psum_quant=psum_quant)
         return jax.lax.all_gather(out, mesh_axis, axis=1, tiled=True)
 
     col = P(*([None] * (digits.ndim - 1) + [mesh_axis]))
+    col3 = P(None, None, mesh_axis)
+    args = (a2, digits, s_p, deq)
+    in_specs = (P(), col, col3, col3)
+    if occ is not None and use_kernel:
+        args += (occ.astype(jnp.uint8),)
+        in_specs += (col3,)
     out = shard_map(
         local, mesh=mesh,
-        in_specs=(P(), col, P(None, None, mesh_axis),
-                  P(None, None, mesh_axis)),
+        in_specs=in_specs,
         out_specs=P(), check_vma=False,
-    )(a2, digits, s_p, deq)
+    )(*args)
     return out[:, :n]
 
 
@@ -172,11 +198,13 @@ def cim_matmul(
     mesh=None,
     mesh_axis: str = COL_SHARD_AXIS,
     adc_free: bool = False,
+    occ=None,
 ) -> jnp.ndarray:
     """CIM matmul over pre-tiled inputs.
 
     a_t:    (..., k_tiles, rows) integer-valued activations
-    digits: (S, k_tiles, rows, N) int8 cell planes
+    digits: (S, k_tiles, rows, N) int8 cell planes — or nibble-packed
+            uint8 (S, k_tiles, rows // 2, N), DESIGN.md §14
     s_p:    (S, k_tiles, N) ADC scales
     deq:    (S, k_tiles, N) fused dequant scales (2^{cs} * s_w * s_a)
     variation_key/std: optional log-normal cell-noise realization
@@ -186,6 +214,9 @@ def cim_matmul(
     adc_free: dispatch the ADC-free hardware style (DESIGN.md §13) —
         exact digital psum accumulation, s_p ignored, no saturation
         side-output (there is no ADC to saturate)
+    occ: optional (S, k_tiles, N) uint8 occupancy map — the kernels skip
+        unoccupied digit planes, bit-exact with the dense evaluation
+        (DESIGN.md §14); ignored by the jnp oracle paths
     returns (..., N) float32
     """
     batch_shape = a_t.shape[:-2]
@@ -203,25 +234,29 @@ def cim_matmul(
             psum_bits=psum_bits, psum_quant=psum_quant,
             use_kernel=use_kernel, block_m=block_m, block_n=block_n,
             variation_key=variation_key, variation_std=variation_std,
-            adc_free=adc_free)
+            adc_free=adc_free, occ=occ)
     elif adc_free and use_kernel:
         out = cim_matmul_adc_free_pallas(
-            a2, digits, deq, variation_key, variation_std,
+            a2, digits, deq, variation_key, variation_std, occ,
             block_m=block_m, block_n=block_n,
             interpret=not _on_tpu(),
         )
     elif adc_free:
+        if digits.dtype == jnp.uint8:
+            digits = unpack_nibbles(digits)
         if variation_wanted(variation_key, variation_std):
             digits = perturb_digits(digits, variation_key, variation_std)
         out = ref.cim_matmul_adc_free_ref(a2, digits, deq)
     elif use_kernel:
         out = cim_matmul_pallas(
-            a2, digits, s_p, deq, variation_key, variation_std,
+            a2, digits, s_p, deq, variation_key, variation_std, occ,
             psum_bits=psum_bits, psum_quant=psum_quant,
             block_m=block_m, block_n=block_n,
             interpret=not _on_tpu(),
         )
     else:
+        if digits.dtype == jnp.uint8:
+            digits = unpack_nibbles(digits)
         if variation_wanted(variation_key, variation_std):
             digits = perturb_digits(digits, variation_key, variation_std)
         out = ref.cim_matmul_ref(
@@ -252,7 +287,13 @@ def cim_matmul_experts(
     ``use_kernel``, no per-call variation, saturation collector unarmed,
     bank small enough to stream. Everything outside that gate falls back
     to ``lax.map``. Returns (E, C, N) float32."""
-    if digits.dtype == jnp.int4:
+    if digits.dtype == jnp.uint8:
+        # nibble-packed expert bank: unpack host-side — the batched
+        # experts kernel streams logical int8 planes (the nibble win is
+        # the artifact/HBM-resident layout; the bank gate already bounds
+        # the bank to ≤4 MiB so the upcast stays cheap)
+        digits = unpack_nibbles(digits)
+    elif digits.dtype == jnp.int4:
         digits = digits.astype(jnp.int8)
     return cim_matmul_experts_pallas(
         a_t, digits, s_p, deq,
@@ -283,21 +324,25 @@ def cim_conv(
     mesh=None,
     mesh_axis: str = COL_SHARD_AXIS,
     adc_free: bool = False,
+    occ=None,
 ) -> jnp.ndarray:
     """CIM conv over activation codes and packed conv digit planes.
 
     a_int:  (B, H, W, C_in) integer-valued activation codes
     digits: (S, k_tiles, kh*kw*c_per_array, C_out) cell planes in the
-            stretched-kernel row layout (see repro.api.pack_conv)
+            stretched-kernel row layout (see repro.api.pack_conv) — or
+            nibble-packed uint8 (S, k_tiles, kh*kw*(c_per_array // 2),
+            C_out), each tap its own packed block (DESIGN.md §14)
     s_p:    (S, k_tiles, C_out) ADC scales
     deq:    (S, k_tiles, C_out) fused dequant scales
     variation_key/std: optional log-normal cell-noise realization
     mesh/mesh_axis: column-shard the planes over this mesh axis — the
         C_out axis for conv (DESIGN.md §10); bit-exact with single-device
+    occ: optional (S, k_tiles, C_out) uint8 occupancy map (DESIGN.md §14)
     returns (B, H', W', C_out) float32
     """
     if digits.dtype == jnp.int4:
-        # int4 is the HBM storage dtype; the kernel loads via int8
+        # dense int4 is a legacy HBM storage dtype; the kernel loads int8
         digits = digits.astype(jnp.int8)
     if not isinstance(padding, str):
         # hashable for the jit static arg
@@ -310,11 +355,13 @@ def cim_conv(
         _record_saturation(
             p_t.reshape(b_ * ho_ * wo_, k_tiles, p_t.shape[-1]),
             digits, s_p, psum_bits=psum_bits,
-            variation_key=variation_key, variation_std=variation_std)
+            variation_key=variation_key, variation_std=variation_std,
+            nibble_groups=kh * kw)
     if col_shards(mesh, mesh_axis) > 1:
         # same lowering as cim_conv_pallas: patches once (replicated),
         # then the column-parallel matmul grid over the C_out shards
-        k_tiles, rows = digits.shape[1], digits.shape[2]
+        k_tiles = digits.shape[1]
+        rows = kh * kw * c_per_array    # logical rows, from the geometry
         a_t = ref.extract_conv_patches(a_int, kh, kw, stride, padding,
                                        k_tiles, c_per_array)
         b, ho, wo = a_t.shape[:3]
@@ -323,17 +370,19 @@ def cim_conv(
             mesh, mesh_axis, psum_bits=psum_bits, psum_quant=psum_quant,
             use_kernel=use_kernel, block_m=block_m, block_n=block_n,
             variation_key=variation_key, variation_std=variation_std,
-            adc_free=adc_free)
+            adc_free=adc_free, occ=occ, nibble_groups=kh * kw)
         return out.reshape(b, ho, wo, digits.shape[-1])
     if adc_free and use_kernel:
         return cim_conv_adc_free_pallas(
-            a_int, digits, deq, variation_key, variation_std,
+            a_int, digits, deq, variation_key, variation_std, occ,
             kh=kh, kw=kw, stride=stride, padding=padding,
             c_per_array=c_per_array,
             block_m=block_m, block_n=block_n,
             interpret=not _on_tpu(),
         )
     if adc_free:
+        if digits.dtype == jnp.uint8:
+            digits = unpack_nibbles(digits, groups=kh * kw)
         if variation_wanted(variation_key, variation_std):
             digits = perturb_digits(digits, variation_key, variation_std)
         k_tiles, rows = digits.shape[1], digits.shape[2]
@@ -346,13 +395,15 @@ def cim_conv(
         return out.reshape(b, ho, wo, digits.shape[-1])
     if use_kernel:
         return cim_conv_pallas(
-            a_int, digits, s_p, deq, variation_key, variation_std,
+            a_int, digits, s_p, deq, variation_key, variation_std, occ,
             kh=kh, kw=kw, stride=stride, padding=padding,
             c_per_array=c_per_array,
             psum_bits=psum_bits, psum_quant=psum_quant,
             block_m=block_m, block_n=block_n,
             interpret=not _on_tpu(),
         )
+    if digits.dtype == jnp.uint8:
+        digits = unpack_nibbles(digits, groups=kh * kw)
     if variation_wanted(variation_key, variation_std):
         digits = perturb_digits(digits, variation_key, variation_std)
     return ref.cim_conv_ref(

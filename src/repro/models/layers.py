@@ -44,16 +44,29 @@ def conv_specs(
     keeps the float HWIO weight for QAT. The out_axis lands on the planes'
     last (C_out) axis — the column-shard axis of mesh-aware deploy serving
     (DESIGN.md §10), matching ``DeployArtifact.shard``'s placement."""
-    from repro.api.backends import conv_plane_tiling, is_packed, plane_bits
+    from repro.api.backends import (conv_plane_tiling, has_own_pack,
+                                    is_packed, plane_bits)
     from repro.core.granularity import conv_tiling
 
     packed = is_packed(cim)
     if packed:
         # plane geometry is the backend's (binary: S=1 sign planes)
         t, cpa = conv_plane_tiling(cim, kh, kw, c_in, c_out)
+        own_pack = has_own_pack(cim)
+        if own_pack:
+            cpa_s, store = cpa, cim.store_dtype()
+        else:
+            # standard v4 pack: int4 planes store nibble-packed along the
+            # channel-slice axis and carry a w_occ map (DESIGN.md §14)
+            from repro.core.nibble import stored_rows
+            cpa_s, store = stored_rows(cpa, cim.store_dtype())
         specs = {"w_digits": ParamSpec(
-            (t.n_split, t.k_tiles, kh, kw, cpa, c_out), cim.store_dtype(),
+            (t.n_split, t.k_tiles, kh, kw, cpa_s, c_out), store,
             "zeros", (None, None, None, None, None, out_axis))}
+        if not own_pack:
+            specs["w_occ"] = ParamSpec(
+                (t.n_split, t.k_tiles, c_out), jnp.uint8, "zeros",
+                (None, None, out_axis))
     else:
         # He init over the full receptive field (kh*kw*c_in), matching
         # init_cim_conv — ParamSpec's "fan_in" string would only see c_in
@@ -706,12 +719,18 @@ def _expert_matmul(p: Dict, nm: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.nd
         # already proven under scan by the stacked-layer serving path.
         if _batched_experts_ok(p, nm, cfg):
             return _batched_expert_matmul(p, nm, x, cfg)
+        has_occ = f"{nm}_occ" in p   # v4 banks: per-expert occupancy maps
         def one(args):
-            xe, d, s_w, s_p, s_a = args
-            return linear(xe, {"w_digits": d, "s_w": s_w, "s_p": s_p,
-                               "s_a": s_a}, cfg.cim, compute_dtype=cdt(cfg))
-        return jax.lax.map(one, (x, p[f"{nm}_digits"], p[f"{nm}_s_w"],
-                                 p[f"{nm}_s_p"], p[f"{nm}_s_a"]))
+            xe, d, s_w, s_p, s_a = args[:5]
+            node = {"w_digits": d, "s_w": s_w, "s_p": s_p, "s_a": s_a}
+            if has_occ:
+                node["w_occ"] = args[5]
+            return linear(xe, node, cfg.cim, compute_dtype=cdt(cfg))
+        operands = (x, p[f"{nm}_digits"], p[f"{nm}_s_w"],
+                    p[f"{nm}_s_p"], p[f"{nm}_s_a"])
+        if has_occ:
+            operands += (p[f"{nm}_occ"],)
+        return jax.lax.map(one, operands)
     # unpacked tree on a packed backend: fall back to emulate (identical
     # quantization arithmetic; only the storage layout differs)
     ecfg = (cfg.cim if not is_packed(cfg.cim)

@@ -27,7 +27,7 @@ def linear_specs(
     dtype=jnp.float32,
     init: str | None = None,
 ) -> Dict[str, ParamSpec]:
-    from repro.api.backends import (is_packed, plane_bits,
+    from repro.api.backends import (has_own_pack, is_packed, plane_bits,
                                     plane_tiling)  # lazy: api builds on nn
     w_init = init or "fan_in:1.0"
     packed = is_packed(cim)
@@ -39,9 +39,22 @@ def linear_specs(
         # plane geometry is the BACKEND's (binary packs S=1 sign planes),
         # not necessarily the config's training-time bit widths.
         t = plane_tiling(cim, k, n)
+        own_pack = has_own_pack(cim)
+        if own_pack:
+            # plane-geometry backends (binary) keep dense plane storage
+            rows_s, store = t.array_rows, cim.store_dtype()
+        else:
+            # standard v4 pack: int4 planes store nibble-packed (uint8,
+            # half the rows) and carry a w_occ occupancy map
+            from repro.core.nibble import stored_rows
+            rows_s, store = stored_rows(t.array_rows, cim.store_dtype())
         specs = {"w_digits": ParamSpec(
-            (t.n_split, t.k_tiles, t.array_rows, n), cim.store_dtype(),
+            (t.n_split, t.k_tiles, rows_s, n), store,
             "zeros", (None, None, None, out_axis))}
+        if not own_pack:
+            specs["w_occ"] = ParamSpec(
+                (t.n_split, t.k_tiles, n), jnp.uint8, "zeros",
+                (None, None, out_axis))
     else:
         specs = {"w": ParamSpec((k, n), dtype, w_init, (in_axis, out_axis))}
     if cim is not None and cim.enabled:

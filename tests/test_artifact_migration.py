@@ -1,0 +1,181 @@
+"""v3 -> v4 artifact migration: old artifacts load and serve bit-exact.
+
+Layout v4 (nibble-packed int4 planes + per-plane occupancy maps) changed
+what ``DeployArtifact.save`` writes, but every v1-v3 artifact in the
+fleet must keep loading: ``load()`` migrates standard-pack params
+in-memory (``_migrate_pre_v4``) — unpacked int4 planes nibble-pack where
+the packed axis is even, and every digit-plane leaf gains its ``*_occ``
+sibling — and the migrated tree must equal a fresh v4 pack leaf-for-leaf
+and serve bit-exactly. Backends with their own pack format (binary)
+pass through untouched.
+
+The v3 fixtures are fabricated from today's packer by inverting the v4
+storage transform (unpack nibbles, drop occ) and stamping
+``layout_version: 3`` — byte-equivalent to what the PR 9 writer
+produced.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import CIMConfig, DeployArtifact, QuantConv2d, QuantLinear
+from repro.core.nibble import is_nibble_packed, unpack_nibbles
+
+
+def _cfg(mode="deploy", **kw):
+    base = dict(enabled=True, mode=mode, weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=4, array_rows=32, array_cols=32,
+                pack_dtype="int4")
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def _downgrade_params(tree):
+    """Invert the v4 storage transform: nibble planes back to dense int4,
+    occupancy maps dropped — the exact leaf set a v3 writer stored."""
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            if k.endswith("_occ"):
+                continue
+            if isinstance(v, (dict, list, tuple)):
+                out[k] = _downgrade_params(v)
+            elif k.endswith("_digits") and is_nibble_packed(v):
+                out[k] = unpack_nibbles(jnp.asarray(v)).astype(jnp.int4)
+            else:
+                out[k] = v
+        return out
+    if isinstance(tree, (list, tuple)):
+        return [_downgrade_params(v) for v in tree]
+    return tree
+
+
+def _write_v3(art, path):
+    """Persist ``art`` as its v3 ancestor (dense planes, no occ, header
+    stamped layout_version 3)."""
+    v3 = dataclasses.replace(art, params=_downgrade_params(art.params),
+                             layout_version=3)
+    v3.save(path)
+    with open(os.path.join(path, "artifact.json")) as f:
+        head = json.load(f)
+    assert head["layout_version"] == 3
+    return v3
+
+
+def _assert_trees_equal(a, b):
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _no_occ_keys(tree):
+    if isinstance(tree, dict):
+        return all(not k.endswith("_occ") and _no_occ_keys(v)
+                   for k, v in tree.items())
+    if isinstance(tree, (list, tuple)):
+        return all(_no_occ_keys(v) for v in tree)
+    return True
+
+
+def test_v3_linear_artifact_loads_as_v4_and_serves_bit_exact(tmp_path):
+    cfg = _cfg()
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (6, 96)))
+    h = QuantLinear(96, 40, cfg).init(jax.random.PRNGKey(0)).calibrate(x)
+    art = h.pack()                                 # fresh v4
+    assert is_nibble_packed(art.params["w_digits"])
+    assert "w_occ" in art.params
+
+    path = str(tmp_path / "v3")
+    _write_v3(art, path)
+    loaded = DeployArtifact.load(path)
+
+    # migrated in-memory to the v4 layout, leaf-for-leaf == fresh pack
+    assert loaded.layout_version == 4
+    _assert_trees_equal(loaded.params, art.params)
+
+    y_v4 = api.linear(x, art.params, art.config, compute_dtype=jnp.float32)
+    y_mig = api.linear(x, loaded.params, loaded.config,
+                       compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_v4), np.asarray(y_mig))
+
+
+@pytest.mark.parametrize("array_rows", [36, 32])   # cpa 4 (packs) / 3 (odd)
+def test_v3_conv_artifact_migrates(array_rows, tmp_path):
+    cfg = _cfg(array_rows=array_rows)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 9, 9, 12)))
+    h = (QuantConv2d(3, 3, 12, 20, cfg)
+         .init(jax.random.PRNGKey(0)).calibrate(x))
+    art = h.pack()
+    packs = array_rows == 36                       # even c_per_array only
+    assert is_nibble_packed(art.params["w_digits"]) == packs
+
+    path = str(tmp_path / "v3")
+    _write_v3(art, path)
+    loaded = DeployArtifact.load(path)
+
+    assert loaded.layout_version == 4
+    assert is_nibble_packed(loaded.params["w_digits"]) == packs
+    assert "w_occ" in loaded.params
+    _assert_trees_equal(loaded.params, art.params)
+
+    y_v4 = api.conv2d(x, art.params, art.config, compute_dtype=jnp.float32)
+    y_mig = api.conv2d(x, loaded.params, loaded.config,
+                       compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_v4), np.asarray(y_mig))
+
+
+def test_v3_model_artifact_migrates_nested_tree(tmp_path):
+    """A whole-model tree (nested dicts incl. non-CIM leaves) migrates
+    node-by-node: every digit plane gains occ, nibble planes repack."""
+    from repro.configs.registry import get_config
+    from repro.models.registry import get_model
+    from repro.nn import init_params
+    cfg = get_config("llama3-8b", reduced=True, cim=_cfg(mode="emulate")) \
+        .replace(compute_dtype="float32", remat=False)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    art = api.model_artifact(params, cfg.cim)
+
+    path = str(tmp_path / "v3")
+    _write_v3(art, path)
+    loaded = DeployArtifact.load(path)
+
+    assert loaded.layout_version == 4
+    _assert_trees_equal(loaded.params, art.params)
+
+    dcfg = cfg.replace(cim=loaded.config)
+    y_v4 = np.asarray(model.forward(art.params, tokens, dcfg))
+    y_mig = np.asarray(model.forward(loaded.params, tokens, dcfg))
+    np.testing.assert_array_equal(y_v4, y_mig)
+
+
+def test_v3_binary_artifact_passes_through_untouched(tmp_path):
+    """The binary backend owns its pack format: migration must not graft
+    occupancy maps or re-dtype its planes."""
+    cfg = _cfg("binary")
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (6, 96)))
+    h = QuantLinear(96, 40, cfg).init(jax.random.PRNGKey(0)).calibrate(x)
+    art = h.pack()
+    assert _no_occ_keys(art.params)
+
+    path = str(tmp_path / "v3")
+    # binary's v3 params == its v4 params; only the header version moves
+    v3 = dataclasses.replace(art, layout_version=3)
+    v3.save(path)
+    loaded = DeployArtifact.load(path)
+
+    assert loaded.layout_version == 4      # header upgraded...
+    assert _no_occ_keys(loaded.params)     # ...params untouched
+    _assert_trees_equal(loaded.params, art.params)
+    y_a = api.linear(x, art.params, art.config, compute_dtype=jnp.float32)
+    y_l = api.linear(x, loaded.params, loaded.config,
+                     compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_l))

@@ -1,0 +1,197 @@
+"""Property layer for the packed-nibble digit planes (DESIGN.md §14).
+
+Pins the storage-level contract the deploy kernels rely on:
+
+  * pack/unpack round-trips exactly over the FULL int4 range — including
+    -8, which a sign-magnitude reading of the nibble would lose;
+  * odd packed-axis counts refuse to pack (the even-only rule that keeps
+    the logical shape reconstructible without metadata);
+  * ragged column counts survive the sharded path's ``pad_cols`` at
+    packed byte width (shard boundaries are byte-aligned because the
+    column axis is never the packed axis);
+  * dtypes are stable under jit — a nibble plane never silently widens;
+  * the conv flattened view unpacks with ``groups=kh*kw`` to exactly the
+    canonical 6-D pack's row order.
+
+Deterministic cases run everywhere; the hypothesis fuzz versions ride
+the optional-dependency shim (``_hypothesis_compat``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.nibble import (NIBBLE_DTYPE, can_pack_nibbles,
+                               is_nibble_packed, occupancy_map, pack_nibbles,
+                               stored_rows, unpack_nibbles)
+from repro.kernels.ops import pad_cols
+
+
+def _planes(rng, shape):
+    return rng.integers(-8, 8, size=shape).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# round trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_full_int4_range_including_minus_8():
+    """Every (lo, hi) nibble pair in [-8, 7]^2 survives the byte."""
+    lo, hi = np.meshgrid(np.arange(-8, 8), np.arange(-8, 8))
+    planes = np.stack([lo.reshape(-1), hi.reshape(-1)]).astype(np.int8)
+    packed = pack_nibbles(jnp.asarray(planes))                # (1, 256)
+    assert packed.shape == (1, 256) and packed.dtype == NIBBLE_DTYPE
+    out = np.asarray(unpack_nibbles(packed))
+    assert out.dtype == np.int8
+    np.testing.assert_array_equal(out, planes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.sampled_from([2, 4, 8, 12, 32, 64]),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_roundtrip_property(rows, n, seed):
+    rng = np.random.default_rng(seed)
+    planes = _planes(rng, (3, 2, rows, n))
+    packed = pack_nibbles(jnp.asarray(planes))
+    assert packed.shape == (3, 2, rows // 2, n)
+    assert is_nibble_packed(packed)
+    np.testing.assert_array_equal(np.asarray(unpack_nibbles(packed)), planes)
+
+
+@pytest.mark.parametrize("n", [1, 7, 33])     # odd / ragged column counts
+def test_roundtrip_odd_column_counts(n):
+    """The packed axis is rows, never columns — any column count packs."""
+    rng = np.random.default_rng(n)
+    planes = _planes(rng, (2, 3, 8, n))
+    packed = pack_nibbles(jnp.asarray(planes))
+    assert packed.shape[-1] == n
+    np.testing.assert_array_equal(np.asarray(unpack_nibbles(packed)), planes)
+
+
+def test_odd_rows_refuse_to_pack():
+    with pytest.raises(ValueError, match="even"):
+        pack_nibbles(jnp.zeros((2, 2, 11, 4), jnp.int8))
+    assert not can_pack_nibbles(11, jnp.int4)
+    assert stored_rows(11, jnp.int4) == (11, jnp.int4)
+    assert stored_rows(12, jnp.int4) == (6, NIBBLE_DTYPE)
+    assert stored_rows(12, jnp.int8) == (12, jnp.int8)
+
+
+def test_unpack_rejects_bad_groups():
+    with pytest.raises(ValueError, match="groups"):
+        unpack_nibbles(jnp.zeros((2, 2, 10, 4), jnp.uint8), groups=4)
+
+
+# ---------------------------------------------------------------------------
+# ragged shards: pad_cols at packed byte width
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,n_shards", [(33, 4), (37, 4), (5, 2), (8, 4)])
+def test_pad_cols_ragged_last_shard_byte_aligned(n, n_shards):
+    """Sharding pads packed uint8 planes along columns only: every shard
+    boundary is byte-aligned, and the logical digits of the original
+    columns are untouched."""
+    rng = np.random.default_rng(n * 31 + n_shards)
+    planes = _planes(rng, (2, 3, 8, n))
+    packed = pack_nibbles(jnp.asarray(planes))
+    s_p = jnp.ones((2, 3, n), jnp.float32)
+    deq = jnp.ones((2, 3, n), jnp.float32)
+    occ = occupancy_map(jnp.asarray(planes))
+    d_p, sp_p, dq_p, occ_p = pad_cols(packed, s_p, deq, n_shards, occ)
+    n_pad = -(-n // n_shards) * n_shards
+    assert d_p.shape[-1] == sp_p.shape[-1] == dq_p.shape[-1] == n_pad
+    assert occ_p.shape[-1] == n_pad
+    assert d_p.dtype == NIBBLE_DTYPE                  # still packed bytes
+    out = np.asarray(unpack_nibbles(d_p))
+    np.testing.assert_array_equal(out[..., :n], planes)
+    assert not np.any(out[..., n:])                   # dead columns: zeros
+    assert not np.any(np.asarray(occ_p)[..., n:])     # dead columns skip
+
+
+def test_pad_cols_without_occ_keeps_arity():
+    d, sp, dq, occ = pad_cols(jnp.zeros((1, 1, 4, 6), jnp.int8),
+                              jnp.ones((1, 1, 6)), jnp.ones((1, 1, 6)), 4)
+    assert occ is None and d.shape[-1] == 8
+
+
+# ---------------------------------------------------------------------------
+# jit dtype stability
+# ---------------------------------------------------------------------------
+
+def test_dtype_stable_under_jit():
+    planes = jnp.asarray(_planes(np.random.default_rng(0), (2, 2, 8, 5)))
+    packed = jax.jit(pack_nibbles)(planes)
+    assert packed.dtype == NIBBLE_DTYPE
+    out = jax.jit(unpack_nibbles)(packed)
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(planes))
+    occ = jax.jit(occupancy_map)(planes)
+    assert occ.dtype == jnp.uint8
+
+
+# ---------------------------------------------------------------------------
+# conv layout: 6-D pack == flattened unpack with groups=kh*kw
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    khw=st.sampled_from([(1, 1), (3, 3), (1, 3), (5, 5)]),
+    cpa=st.sampled_from([2, 4, 14]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_conv_groups_equivalence_property(khw, cpa, seed):
+    _conv_groups_case(khw, cpa, seed)
+
+
+@pytest.mark.parametrize("khw,cpa", [((3, 3), 4), ((1, 1), 2), ((5, 5), 14)])
+def test_conv_groups_equivalence(khw, cpa):
+    _conv_groups_case(khw, cpa, seed=7)
+
+
+def _conv_groups_case(khw, cpa, seed):
+    """The kernels see the 6-D conv plane FLATTENED to (S, kt,
+    kh*kw*cpa_p, C_out); each tap is its own packed block, so unpacking
+    the flat view with groups=kh*kw must restore exactly the flattened
+    canonical (groups=1 on the 6-D layout) digits."""
+    kh, kw = khw
+    rng = np.random.default_rng(seed)
+    d6 = _planes(rng, (2, 2, kh, kw, cpa, 9))
+    packed6 = pack_nibbles(jnp.asarray(d6))           # canonical: cpa axis
+    flat_p = packed6.reshape(2, 2, kh * kw * (cpa // 2), 9)
+    out = np.asarray(unpack_nibbles(flat_p, groups=kh * kw))
+    np.testing.assert_array_equal(out, d6.reshape(2, 2, kh * kw * cpa, 9))
+
+
+# ---------------------------------------------------------------------------
+# occupancy maps
+# ---------------------------------------------------------------------------
+
+def test_occupancy_map_linear_and_conv():
+    planes = np.zeros((2, 3, 4, 5), np.int8)
+    planes[0, 1, 2, 3] = -1
+    occ = np.asarray(occupancy_map(jnp.asarray(planes)))
+    assert occ.shape == (2, 3, 5) and occ.dtype == np.uint8
+    assert occ.sum() == 1 and occ[0, 1, 3] == 1
+
+    d6 = np.zeros((2, 2, 3, 3, 4, 5), np.int8)
+    d6[1, 0, 2, 2, 0, 4] = 3
+    occ6 = np.asarray(occupancy_map(jnp.asarray(d6), conv=True))
+    assert occ6.shape == (2, 2, 5)
+    assert occ6.sum() == 1 and occ6[1, 0, 4] == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_occupancy_invariant_under_packing(seed):
+    """occ computed on logical planes equals occ implied by the packed
+    bytes: a packed row byte is 0 iff both of its digits are 0."""
+    rng = np.random.default_rng(seed)
+    planes = _planes(rng, (2, 2, 8, 11))
+    planes[:, :, :, rng.integers(0, 11)] = 0          # force a dead column
+    occ = np.asarray(occupancy_map(jnp.asarray(planes)))
+    packed = np.asarray(pack_nibbles(jnp.asarray(planes)))
+    np.testing.assert_array_equal(occ, (packed != 0).any(axis=-2))

@@ -87,6 +87,66 @@ def test_linear_variation_threading_under_sharding(mesh4):
     assert not np.array_equal(np.asarray(clean1), np.asarray(noisy1))
 
 
+# -- nibble planes + occupancy maps (layout v4, DESIGN.md §14) --------------
+
+def test_linear_nibble_occ_sharded_bit_exact_under_variation(mesh4):
+    """int4 planes stream as packed uint8 bytes with their occupancy maps
+    through shard_map: 4-device output == 1-device output bit-exactly,
+    clean AND under a shared variation key, on a ragged column count
+    (byte-aligned shard boundaries + occ padded with dead columns)."""
+    from repro.core.nibble import is_nibble_packed
+    cfg = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=32, array_cols=32,
+                    pack_dtype="int4")
+    h = QuantLinear(64, 22, cfg).init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 64))
+    h.calibrate(x)
+    # dead planes: tile 0 zeroed for a column band -> occ has real zeros
+    h.params = dict(h.params, w=h.params["w"].at[:32, 4:12].set(0.0))
+    art = h.pack()
+    assert is_nibble_packed(art.params["w_digits"])       # uint8 storage
+    occ = np.asarray(art.params["w_occ"])
+    assert occ.min() == 0 and occ.max() == 1              # skip path live
+    served = QuantLinear.from_artifact(art)
+
+    var = Variation(jax.random.PRNGKey(7), 0.2)
+    clean1, noisy1 = served(x), served(x, variation=var)
+    set_activation_rules({}, mesh4)
+    try:
+        clean4, noisy4 = served(x), served(x, variation=var)
+    finally:
+        set_activation_rules(None, None)
+    np.testing.assert_array_equal(np.asarray(clean1), np.asarray(clean4))
+    np.testing.assert_array_equal(np.asarray(noisy1), np.asarray(noisy4))
+    assert not np.array_equal(np.asarray(clean1), np.asarray(noisy1))
+
+
+def test_conv_nibble_occ_sharded_bit_exact(mesh4):
+    """Conv analog: array_rows=36 with 3x3 taps gives an even
+    c_per_array=4, so int4 conv planes nibble-pack along the channel
+    axis; ragged c_out=10 over 4 devices."""
+    from repro.core.nibble import is_nibble_packed
+    cfg = CIMConfig(enabled=True, mode="emulate", weight_bits=4, cell_bits=2,
+                    act_bits=8, psum_bits=6, array_rows=36, array_cols=32,
+                    act_signed=False, pack_dtype="int4")
+    h = QuantConv2d(3, 3, 8, 10, cfg, stride=2).init(jax.random.PRNGKey(2))
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(3), (2, 9, 9, 8)))
+    h.calibrate(x)
+    h.params = dict(h.params, w=h.params["w"].at[:, :, :4, 2:6].set(0.0))
+    art = h.pack()
+    assert is_nibble_packed(art.params["w_digits"])
+    assert np.asarray(art.params["w_occ"]).min() == 0
+    served = QuantConv2d.from_artifact(art)
+
+    y1 = served(x)
+    set_activation_rules({}, mesh4)
+    try:
+        y4 = served(x)
+    finally:
+        set_activation_rules(None, None)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y4))
+
+
 # -- conv -------------------------------------------------------------------
 
 def _conv(c_out, pack_dtype="int8", stride=2, padding="SAME"):

@@ -1,0 +1,230 @@
+"""Differential grid: digit-plane sparsity skip == dense, bit-exact.
+
+The v4 pack attaches a per-(split, array tile, column) occupancy map
+(``w_occ``) and the deploy kernels skip the MACs of unoccupied planes
+(DESIGN.md §14). The contract is *bit*-exactness — not tolerance — with
+the dense path: the sparse kernel bodies run the verbatim dense
+expression for any block holding at least one occupied column, so XLA
+cannot re-fuse the accumulate differently, and under the sign ADC
+(psum_bits == 1) fully-skipped blocks fold in the exact compensation
+term the dense path would have produced from an all-zero psum.
+
+Every case compares ``deploy`` forward WITH the occupancy map against
+the identical packed params WITHOUT it (occ=None falls back to the
+pre-v4 dense kernel), over granularity x psum_bits x pack_dtype x
+{linear, conv stride/padding} x variation-key on/off, plus adversarial
+all-zero-plane and all-sign-plane weight constructions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import CIMConfig, Granularity
+
+F32 = jnp.float32
+
+
+def _cfg(mode="deploy", **kw):
+    base = dict(enabled=True, mode=mode, weight_bits=4, cell_bits=2,
+                act_bits=6, psum_bits=4, array_rows=32, array_cols=32,
+                pack_dtype="int4")
+    base.update(kw)
+    return CIMConfig(**base)
+
+
+def _zero_band(w, row_slice, col_slice):
+    """Structurally dead region: zero weights in [row_slice, col_slice]
+    produce all-zero digit planes for the covered (tile, column) pairs
+    on every bit split."""
+    return w.at[row_slice, col_slice].set(0.0)
+
+
+def _pack_linear_with_dead_planes(cfg, k=96, n=40, seed=0):
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed + 1), (6, k)))
+    p = api.init_linear(jax.random.PRNGKey(seed), k, n, cfg)
+    p = api.calibrate_linear(x, p, cfg)
+    # kill tile 0 for columns 8..24 and tile 2 entirely (rows 64..96)
+    w = _zero_band(p["w"], slice(0, cfg.array_rows), slice(8, 24))
+    w = _zero_band(w, slice(64, 96), slice(None))
+    p = dict(p, w=w)
+    packed = api.pack_linear(p, cfg)
+    occ = np.asarray(packed["w_occ"])
+    assert occ.min() == 0 and occ.max() == 1, "construction must leave " \
+        "both occupied and dead planes, or the skip path is untested"
+    return p, packed, x
+
+
+def _pack_conv_with_dead_planes(cfg, kh=3, kw=3, c_in=12, c_out=20, seed=0):
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                      (2, 9, 9, c_in)))
+    p = api.init_conv(jax.random.PRNGKey(seed), kh, kw, c_in, c_out, cfg)
+    p = api.calibrate_conv(x, p, cfg)
+    # w is HWIO: dead (tile, column) pairs = whole input-channel slices
+    # zeroed for a column band (tile membership is c // c_per_array)
+    w = p["w"].at[:, :, :4, 5:14].set(0.0)
+    w = w.at[:, :, :, 17].set(0.0)          # one fully dead output column
+    p = dict(p, w=w)
+    packed = api.pack_conv(p, cfg)
+    occ = np.asarray(packed["w_occ"])
+    assert occ.min() == 0 and occ.max() == 1
+    return p, packed, x
+
+
+def _dense(packed):
+    d = dict(packed)
+    d.pop("w_occ")
+    return d
+
+
+def _keys(with_variation):
+    return (jax.random.PRNGKey(3), 0.05) if with_variation else (None, None)
+
+
+# ---------------------------------------------------------------------------
+# linear grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("granularity", [Granularity.COLUMN,
+                                         Granularity.ARRAY])
+@pytest.mark.parametrize("psum_bits", [1, 4])
+@pytest.mark.parametrize("pack_dtype", ["int8", "int4"])
+@pytest.mark.parametrize("variation", [False, True])
+def test_linear_sparse_skip_bit_exact(granularity, psum_bits, pack_dtype,
+                                      variation):
+    cfg = _cfg(psum_bits=psum_bits, pack_dtype=pack_dtype,
+               weight_granularity=granularity, psum_granularity=granularity)
+    _, packed, x = _pack_linear_with_dead_planes(cfg)
+    vk, vs = _keys(variation)
+    y_sparse = api.linear(x, packed, cfg, variation_key=vk,
+                          variation_std=vs, compute_dtype=F32)
+    y_dense = api.linear(x, _dense(packed), cfg, variation_key=vk,
+                         variation_std=vs, compute_dtype=F32)
+    np.testing.assert_array_equal(np.asarray(y_sparse), np.asarray(y_dense))
+
+
+@pytest.mark.parametrize("psum_bits", [1, 4])
+def test_linear_sparse_matches_oracle(psum_bits):
+    """Sparse kernel == packed jnp oracle (which ignores occ) within the
+    repo's kernel arbitration tolerance — the skip is storage-level, not
+    a numerics change."""
+    cfg = _cfg(psum_bits=psum_bits)
+    _, packed, x = _pack_linear_with_dead_planes(cfg)
+    y_k = api.linear(x, packed, cfg, compute_dtype=F32)
+    y_o = api.linear(x, packed, cfg.replace(use_kernel=False),
+                     compute_dtype=F32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_o),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv grid (stride / padding / odd c_per_array)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID")])
+@pytest.mark.parametrize("psum_bits", [1, 4])
+@pytest.mark.parametrize("pack_dtype", ["int8", "int4"])
+def test_conv_sparse_skip_bit_exact(stride, padding, psum_bits, pack_dtype):
+    # array_rows=36 with a 3x3 kernel -> c_per_array=4 (even): int4
+    # planes nibble-pack, so this grid covers skip-on-packed-bytes
+    cfg = _cfg(psum_bits=psum_bits, pack_dtype=pack_dtype, array_rows=36)
+    _, packed, x = _pack_conv_with_dead_planes(cfg)
+    y_sparse = api.conv2d(x, packed, cfg, stride=stride, padding=padding,
+                          compute_dtype=F32)
+    y_dense = api.conv2d(x, _dense(packed), cfg, stride=stride,
+                         padding=padding, compute_dtype=F32)
+    np.testing.assert_array_equal(np.asarray(y_sparse), np.asarray(y_dense))
+
+
+@pytest.mark.parametrize("variation", [False, True])
+def test_conv_sparse_skip_odd_cpa_int4(variation):
+    """array_rows=32 with 3x3 taps -> c_per_array=3 (odd): int4 stays
+    dense storage (no nibble pack), but the occupancy skip still applies;
+    variation noise must not invalidate the clean-digit occupancy map."""
+    cfg = _cfg(psum_bits=1, array_rows=32)
+    p, packed, x = _pack_conv_with_dead_planes(cfg)
+    assert str(np.asarray(packed["w_digits"]).dtype) == "int4"
+    vk, vs = _keys(variation)
+    y_sparse = api.conv2d(x, packed, cfg, variation_key=vk,
+                          variation_std=vs, compute_dtype=F32)
+    y_dense = api.conv2d(x, _dense(packed), cfg, variation_key=vk,
+                         variation_std=vs, compute_dtype=F32)
+    np.testing.assert_array_equal(np.asarray(y_sparse), np.asarray(y_dense))
+
+
+# ---------------------------------------------------------------------------
+# adc_free backend rides the same occ plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make",
+                         [_pack_linear_with_dead_planes,
+                          _pack_conv_with_dead_planes],
+                         ids=["linear", "conv"])
+def test_adc_free_sparse_skip_bit_exact(make):
+    cfg = _cfg("adc_free", array_rows=36)
+    _, packed, x = make(cfg)
+    fwd = api.linear if x.ndim == 2 else api.conv2d
+    y_sparse = fwd(x, packed, cfg, compute_dtype=F32)
+    y_dense = fwd(x, _dense(packed), cfg, compute_dtype=F32)
+    np.testing.assert_array_equal(np.asarray(y_sparse), np.asarray(y_dense))
+
+
+# ---------------------------------------------------------------------------
+# adversarial constructions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("psum_bits", [1, 4])
+def test_all_zero_weight_every_plane_skipped(psum_bits):
+    """w == 0: every plane is dead, every kernel block takes the skip
+    branch. Under the sign ADC the output is NONZERO (psum 0 quantizes
+    to +1 per column -> the compensation term), and sparse must
+    reproduce it bit-exactly."""
+    cfg = _cfg(psum_bits=psum_bits)
+    k, n = 96, 40
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (6, k)))
+    p = api.init_linear(jax.random.PRNGKey(0), k, n, cfg)
+    p = api.calibrate_linear(x, p, cfg)
+    p = dict(p, w=jnp.zeros_like(p["w"]))
+    packed = api.pack_linear(p, cfg)
+    assert not np.asarray(packed["w_occ"]).any()
+    y_sparse = api.linear(x, packed, cfg, compute_dtype=F32)
+    y_dense = api.linear(x, _dense(packed), cfg, compute_dtype=F32)
+    np.testing.assert_array_equal(np.asarray(y_sparse), np.asarray(y_dense))
+    if psum_bits == 1:
+        assert np.abs(np.asarray(y_dense)).max() > 0, \
+            "sign-ADC zero-plane output must be nonzero — the " \
+            "compensation term is what the skip has to reproduce"
+    else:
+        np.testing.assert_array_equal(np.asarray(y_dense),
+                                      np.zeros_like(y_dense))
+
+
+@pytest.mark.parametrize("psum_bits", [1, 4])
+def test_all_sign_plane_never_skipped(psum_bits):
+    """w at negative full scale: the sign (MSB) digit plane saturates
+    everywhere — those planes are maximally occupied and must not skip —
+    while lower digit planes of columns that quantize exactly to -8
+    (digits [-2, 0]) go dead, and a zeroed column band adds fully dead
+    columns. The mix of live-sign/dead-LSB planes in one layer is the
+    adversarial part."""
+    cfg = _cfg(psum_bits=psum_bits)
+    k, n = 96, 40
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (6, k)))
+    p = api.init_linear(jax.random.PRNGKey(0), k, n, cfg)
+    p = api.calibrate_linear(x, p, cfg)
+    w = -jnp.max(jnp.abs(p["w"])) * jnp.ones_like(p["w"])
+    w = _zero_band(w, slice(None), slice(30, 40))     # dead columns 30..39
+    p = dict(p, w=w)
+    packed = api.pack_linear(p, cfg)
+    occ = np.asarray(packed["w_occ"])
+    # every live column has its sign plane occupied in some split; the
+    # zeroed band is dead across all splits; and at least one live
+    # column carries a dead lower-digit plane (the skip under test)
+    assert occ[..., :30].any(axis=0).all()
+    assert not occ[..., 30:].any()
+    assert not occ[..., :30].all()
+    y_sparse = api.linear(x, packed, cfg, compute_dtype=F32)
+    y_dense = api.linear(x, _dense(packed), cfg, compute_dtype=F32)
+    np.testing.assert_array_equal(np.asarray(y_sparse), np.asarray(y_dense))

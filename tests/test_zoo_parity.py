@@ -28,6 +28,7 @@ import pytest
 from repro.api import DeployArtifact, model_artifact
 from repro.configs.registry import ARCHS, get_config
 from repro.core.cim_linear import CIMConfig
+from repro.core.nibble import stored_rows
 from repro.models.registry import frontend_input_shape, get_model
 from repro.nn import init_params
 
@@ -129,8 +130,11 @@ def test_moe_banks_packed_per_expert(arch):
                      ("wd", cfg.moe.d_ff, cfg.d_model)):
         t = cfg.cim.tiling(k, n)
         d = moe[f"{nm}_digits"]
-        assert d.shape == (L, E, t.n_split, t.k_tiles, t.array_rows, n)
-        assert d.dtype == cfg.cim.store_dtype()
+        # v4 pack: int4 planes with an even row count store nibble-packed
+        rows_s, store = stored_rows(t.array_rows, cfg.cim.store_dtype())
+        assert d.shape == (L, E, t.n_split, t.k_tiles, rows_s, n)
+        assert d.dtype == store
+        assert moe[f"{nm}_occ"].shape == (L, E, t.n_split, t.k_tiles, n)
         assert moe[f"{nm}_s_w"].shape[:2] == (L, E)   # per-expert scales
         assert f"moe_layers/moe/{nm}" in art.meta["col_shard"]
     # the raw banks are gone; router and shared experts ride along
